@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: timing + CSV emission + datasets.
+
+Every benchmark emits ``name,us_per_call,derived`` rows (the harness
+contract): ``us_per_call`` is wall-time per jitted call where timing makes
+sense (0 for pure-accuracy rows), ``derived`` is the paper-relevant quantity
+(accuracy, storage words, ratio, ...).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from functools import lru_cache
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+@lru_cache(maxsize=4)
+def mnist_like(n_train=6000, n_test=1500, seed=0, n_features=None):
+    from repro.data import synthetic_mnist
+    return synthetic_mnist(n_train=n_train, n_test=n_test, seed=seed,
+                           n_features=n_features)
+
+
+@lru_cache(maxsize=2)
+def reuters_like(n_train=6000, n_test=1500, seed=0, redundancy=8):
+    from repro.data import synthetic_features
+    return synthetic_features(n_train=n_train, n_test=n_test, seed=seed,
+                              n_classes=50, n_features=2000,
+                              redundancy=redundancy)

@@ -1,0 +1,45 @@
+"""Paper Fig. 1 — trained FC weight histograms motivate sparsity, and
+accuracy vs overall density (sparsifying junction 1 first).
+
+Reported: the fraction of near-zero weights per junction after FC training
+(the paper's visual claim: junction 1 has far more near-zero weights than
+junction 2 — that is why early junctions tolerate sparsity), and the
+accuracy-vs-density curve of Fig. 1(c).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.paper_mlp import MNIST_2J, rho_from_dout
+from repro.nn.mlp import MLPConfig, SparseMLP, train_mlp
+
+from .common import emit, mnist_like
+
+
+def run(epochs: int = 12, full: bool = False):
+    data = mnist_like()
+    model = SparseMLP(MLPConfig(n_net=MNIST_2J))
+    params, acc = train_mlp(model, data, epochs=epochs, seed=0)
+    emit("fig1/fc_test_acc", 0.0, round(acc, 4))
+
+    fracs = []
+    for i in range(2):
+        w = np.asarray(params[f"j{i}"]["w"]).reshape(-1)
+        thresh = 0.02 * np.abs(w).max()
+        fracs.append(float((np.abs(w) < thresh).mean()))
+        emit(f"fig1/junction{i + 1}_near_zero_frac", 0.0,
+             round(fracs[-1], 4))
+    # the motivating observation: junction 1 is much more sparsifiable
+    emit("fig1/j1_over_j2_near_zero_ratio", 0.0,
+         round(fracs[0] / max(fracs[1], 1e-6), 2))
+
+    # Fig 1(c): accuracy vs density, thinning junction 1 first
+    douts = [(50, 10), (20, 10), (10, 10), (5, 10)] if not full else \
+        [(80, 10), (50, 10), (20, 10), (10, 10), (5, 10), (2, 10)]
+    for d_out in douts:
+        rho = rho_from_dout(MNIST_2J, d_out)
+        cfg = MLPConfig(n_net=MNIST_2J, rho=rho, method="clashfree")
+        m = SparseMLP(cfg)
+        _, a = train_mlp(m, data, epochs=epochs, seed=0)
+        emit(f"fig1c/rho{m.density() * 100:.1f}_acc", 0.0, round(a, 4))

@@ -1,0 +1,48 @@
+"""Timed micro-benchmarks: the CSD-SpMM sparse junction vs dense matmul.
+
+Wall-clock on this host CPU (XLA path; the Pallas path targets TPU), at
+several densities. ``derived`` reports the speedup over dense and the
+effective GFLOP/s. The paper's complexity claim (compute scales with |W|)
+is checked directly: flops_ratio ~= rho.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_block_pattern
+from repro.kernels import ops
+
+from .common import emit, time_call
+
+
+def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
+    x = jax.random.normal(jax.random.key(0), (m, n_in))
+    wd = jax.random.normal(jax.random.key(1), (n_in, n_out)) * 0.02
+
+    dense = jax.jit(lambda x, w: x @ w)
+    t_dense = time_call(dense, x, wd)
+    emit("kernel/dense_matmul", t_dense,
+         f"{2 * m * n_in * n_out / (t_dense * 1e-6) / 1e9:.1f}GFLOPs")
+
+    for rho in (0.5, 0.25, 0.125):
+        bp = make_block_pattern(n_in, n_out, rho, block_in=128,
+                                block_out=128, seed=0)
+        w = jax.random.normal(
+            jax.random.key(2), (bp.n_rb, bp.d_in_b, 128, 128)) * 0.02
+        f = jax.jit(lambda x, w: ops.csd_matmul(x, w, bp, backend="xla"))
+        t = time_call(f, x, w)
+        emit(f"kernel/csd_spmm_rho{rho}", t,
+             f"speedup_vs_dense={t_dense / t:.2f}x")
+
+    # training-step complexity scales with density (paper's core claim)
+    def step_flops(rho):
+        if rho == 1.0:
+            return 2 * m * n_in * n_out
+        bp = make_block_pattern(n_in, n_out, rho, block_in=128,
+                                block_out=128)
+        return 2 * m * bp.n_weight_elems
+
+    emit("kernel/flops_ratio_rho0.25", 0.0,
+         round(step_flops(0.25) / step_flops(1.0), 3))

@@ -1,0 +1,65 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json (written by
+``repro.launch.dryrun``) and renders the per-(arch x shape x mesh) roofline
+table as markdown (stdout + experiments/roofline.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+HEAD = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO flops | roofline frac |")
+SEP = "|" + "---|" * 9
+
+
+def load(dirname: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows) -> str:
+    out = [HEAD, SEP]
+    for r in rows:
+        roof = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {roof['compute_s']:.4f} | {roof['memory_s']:.4f} "
+            f"| {roof['collective_s']:.4f} | {roof['dominant']} "
+            f"| {roof.get('useful_flop_ratio', 0):.3f} "
+            f"| {roof.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(out)
+
+
+def run(dirname: str = "experiments/dryrun",
+        baseline_dir: str = "experiments/dryrun_baseline"):
+    rows = load(dirname)
+    if not rows:
+        emit("roofline/cells", 0.0, 0)
+        print("(no dry-run results found — run repro.launch.dryrun first)")
+        return
+    md = "## Optimized (post-hillclimb)\n\n" + render(rows)
+    base = load(baseline_dir)
+    if base:
+        md += ("\n\n## Paper-faithful baseline (pre-hillclimb, "
+               "128x128 blocks)\n\n" + render(base))
+    print(md)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write(md + "\n")
+    emit("roofline/cells", 0.0, len(rows))
+    fracs = [r["roofline"].get("roofline_fraction", 0.0) for r in rows
+             if r["kind"] == "train" and r["mesh"] == "16x16"]
+    if fracs:
+        emit("roofline/train_median_fraction", 0.0,
+             round(sorted(fracs)[len(fracs) // 2], 3))
+    if base:
+        bf = [r["roofline"].get("roofline_fraction", 0.0) for r in base
+              if r["kind"] == "train" and r["mesh"] == "16x16"]
+        if bf:
+            emit("roofline/train_median_fraction_baseline", 0.0,
+                 round(sorted(bf)[len(bf) // 2], 3))

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``            quick set (~10 min CPU)
+``PYTHONPATH=src python -m benchmarks.run --full``     full Table II ladder
+``PYTHONPATH=src python -m benchmarks.run --only table2,fig12``
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--epochs", type=int, default=None)
+    args = ap.parse_args()
+
+    from . import (fig1_histograms, fig7_junction_density, fig9_large_sparse,
+                   fig12_other_methods, kernel_bench, roofline,
+                   table1_storage, table2_methods)
+    from .common import emit
+
+    ep = args.epochs
+    benches = {
+        "table1": lambda: table1_storage.run(
+            train=True, epochs=ep or 12),
+        "table2": lambda: table2_methods.run(
+            full=args.full, epochs=ep or 10),
+        "fig1": lambda: fig1_histograms.run(epochs=ep or 12,
+                                            full=args.full),
+        "fig7": lambda: fig7_junction_density.run(epochs=ep or 10),
+        "fig9": lambda: fig9_large_sparse.run(epochs=ep or 10),
+        "fig12": lambda: fig12_other_methods.run(epochs=ep or 10),
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        t0 = time.time()
+        try:
+            benches[name]()
+            emit(f"{name}/elapsed_s", 0.0, round(time.time() - t0, 1))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("FAILURES:", failures, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver #2: pretrain a ~100M-param LM with pre-defined sparse
+FFN junctions for a few hundred steps on synthetic bigram data.
+
+The paper's technique applied at LM scale: every FFN junction is a
+block-circulant clash-free sparse matrix (rho_up=0.5, rho_down=0.75); the
+trainer is the full production path (AdamW, grad clip, cosine schedule,
+checkpointing, grad accumulation).
+
+    PYTHONPATH=src python examples/sparse_llm_pretrain.py \
+        [--steps 300] [--dense] [--size full100m|small]
+"""
+import argparse
+import time
+
+from repro.data import BigramLM
+from repro.nn import ModelConfig, SparsityConfig, build_model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def make_config(size: str, dense: bool) -> ModelConfig:
+    sp = SparsityConfig(enabled=not dense, rho_ffn=(0.5, 0.75),
+                        block_in=64, block_out=64)
+    if size == "full100m":
+        # ~100M params: 12L x d512 x ffn2048, 32k vocab
+        return ModelConfig(
+            name="sparse-llm-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, d_ff=2048, vocab_size=32768, sparsity=sp,
+            attn_chunk=128, loss_chunk=256, dtype="float32", remat=False)
+    return ModelConfig(
+        name="sparse-llm-small", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab_size=2048, sparsity=sp,
+        attn_chunk=64, loss_chunk=128, dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--size", default="small",
+                    choices=["small", "full100m"])
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = make_config(args.size, args.dense)
+    model = build_model(cfg)
+    n = sum(x.size for x in __import__("jax").tree.leaves(
+        model.init(__import__("jax").random.key(0))))
+    ffn_w = sum(l.n_params for blk_kind in [] for l in [])  # shown below
+    print(f"model: {cfg.name}  params={n / 1e6:.1f}M  "
+          f"sparsity={'off' if args.dense else cfg.sparsity.rho_ffn}")
+
+    tc = TrainerConfig(
+        opt=AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 1),
+                        total_steps=args.steps, weight_decay=0.05),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=max(args.steps // 4, 1),
+        log_every=max(args.steps // 20, 1))
+    trainer = Trainer(model, tc)
+    data = BigramLM(vocab_size=cfg.vocab_size, branching=8, noise=0.05,
+                    seed=0)
+    t0 = time.time()
+    _, _, hist = trainer.fit(
+        data.iterate(args.batch, args.seq), steps=args.steps,
+        on_step=lambda s, m: print(
+            f"step {s:5d}  loss {m['loss']:.4f}  "
+            f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}", flush=True))
+    dt = time.time() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"done: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"({toks / dt:.0f} tok/s on this host)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Architecture registry: the 10 assigned archs + the paper's own MLPs.
+
+``get_config(name)`` returns the full published configuration;
+``get_config(name, smoke=True)`` returns the reduced same-family variant
+used by the CPU smoke tests (same structural flags, tiny dims).
+Select with ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from ..nn.common import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = [
+    "gemma3_4b",
+    "granite_34b",
+    "gemma2_9b",
+    "qwen2_7b",
+    "seamless_m4t_medium",
+    "deepseek_moe_16b",
+    "granite_moe_1b_a400m",
+    "zamba2_1p2b",
+    "mamba2_130m",
+    "llava_next_34b",
+]
+
+# assignment ids (dashes) -> module names (underscores)
+_ALIASES = {
+    "gemma3-4b": "gemma3_4b",
+    "granite-34b": "granite_34b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2-7b": "qwen2_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "mamba2-130m": "mamba2_130m",
+    "llava-next-34b": "llava_next_34b",
+}
+
+# which shape cells run per arch (DESIGN.md §4): long_500k only for
+# sub-quadratic stacks (ssm / hybrid / 5:1 sliding-window).
+LONG_CONTEXT_ARCHS = {"mamba2_130m", "zamba2_1p2b", "gemma3_4b"}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def shapes_for(name: str) -> List[ShapeConfig]:
+    name = canonical(name)
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if name in LONG_CONTEXT_ARCHS:
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def all_cells() -> List[tuple]:
+    """Every runnable (arch, shape) dry-run cell."""
+    return [(a, s.name) for a in ARCHS for s in shapes_for(a)]

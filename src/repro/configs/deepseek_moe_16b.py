@@ -1,0 +1,44 @@
+"""deepseek-moe-16b [moe] — 28L d_model=2048 16H (kv=16) vocab=102400;
+fine-grained MoE: 64 routed experts (d_expert=1408) top-6 + 2 shared
+experts; layer 0 is a dense FFN (d_ff=10944). [arXiv:2401.06066; hf]
+
+EP note: 64 routed experts shard 4-per-device over the 16-way model axis;
+the shard_map all-to-all dispatch is the collective hot spot for this arch
+(§Roofline).
+"""
+from ..nn.common import ModelConfig, MoEConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,   # per-expert hidden size (assignment's d_ff)
+        vocab_size=102400,
+        max_seq_len=16384,
+        moe=MoEConfig(n_routed=64, top_k=6, n_shared=2, d_expert=1408,
+                      capacity_factor=1.25, first_layer_dense=True,
+                      dense_d_ff=10944),
+        rope_theta=10000.0,
+        act="silu",
+        ffn_gated=True,
+        tie_embeddings=False,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=64, vocab_size=512, max_seq_len=512,
+        moe=MoEConfig(n_routed=8, top_k=2, n_shared=1, d_expert=64,
+                      capacity_factor=1.5, first_layer_dense=True,
+                      dense_d_ff=128),
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

@@ -1,0 +1,43 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144; 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt scaled per assignment; unverified]
+
+Gemma-3 family flags: head_dim 256 (decoupled from d_model), GeGLU FFN,
+sandwich norms + qk-norm, sliding window 1024 on local layers, embeddings
+scaled by sqrt(d_model), tied head. Long-context (500k decode) runs for this
+arch: only 1/6 of layers keep a full-length KV.
+"""
+from ..nn.common import ModelConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b",
+        n_layers=34,
+        d_model=2560,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=10240,
+        vocab_size=262144,
+        max_seq_len=131072,
+        local_global_ratio=5,
+        attn_window=1024,
+        rope_theta=1_000_000.0,
+        post_norms=True,
+        act="gelu_tanh",
+        ffn_gated=True,
+        tie_embeddings=True,
+        scale_embed=True,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=256, vocab_size=512, max_seq_len=512, attn_window=16,
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

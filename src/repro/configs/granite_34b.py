@@ -1,0 +1,33 @@
+"""granite-34b [dense] — 88L d_model=6144 48H (GQA kv=1, i.e. MQA)
+d_ff=24576 vocab=49152; llama-architecture code model. [arXiv:2405.04324; hf]
+"""
+from ..nn.common import ModelConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b",
+        n_layers=88,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=49152,
+        max_seq_len=8192,
+        rope_theta=10000.0,
+        act="silu",
+        ffn_gated=True,
+        tie_embeddings=False,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=256, vocab_size=512, max_seq_len=512,
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

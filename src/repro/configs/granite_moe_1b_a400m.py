@@ -1,0 +1,38 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8)
+vocab=49155; 32 routed experts (d_expert=512) top-8, no shared experts.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from ..nn.common import ModelConfig, MoEConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,    # per-expert hidden size
+        vocab_size=49155,
+        max_seq_len=8192,
+        moe=MoEConfig(n_routed=32, top_k=8, n_shared=0, d_expert=512,
+                      capacity_factor=1.25),
+        rope_theta=10000.0,
+        act="silu",
+        ffn_gated=True,
+        tie_embeddings=True,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=512, max_seq_len=512,
+        moe=MoEConfig(n_routed=8, top_k=2, n_shared=0, d_expert=32,
+                      capacity_factor=1.5),
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

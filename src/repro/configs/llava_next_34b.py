@@ -1,0 +1,41 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000; anyres tiling frontend.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf scaled per assignment; unverified]
+
+Backbone only per the assignment: the anyres vision tower is a STUB —
+``input_specs()`` delivers precomputed patch embeddings (B, S, 1024) which
+the 2-layer MLP projector maps into the LM. Decode embeds generated text
+tokens through the embedding table.
+"""
+from ..nn.common import ModelConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=20480,
+        vocab_size=64000,
+        max_seq_len=32768,
+        input_mode="embeddings",
+        frontend_dim=1024,
+        rope_theta=5_000_000.0,
+        act="silu",
+        ffn_gated=True,
+        tie_embeddings=False,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=256, vocab_size=512, frontend_dim=48, max_seq_len=512,
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

@@ -1,0 +1,39 @@
+"""mamba2-130m [ssm] — 24L d_model=768, attention-free SSD
+(state-space duality), ssm_state=128, vocab=50280. [arXiv:2405.21060]
+
+d_inner = 2*768 = 1536, head_dim 64 -> 24 SSD heads, 1 B/C group.
+Long-context (500k decode) runs: state is O(1) in sequence length.
+§Arch-applicability: pre-defined sparsity attaches to in/out projection
+junctions; the SSD recurrence has no weight junction (DESIGN.md).
+"""
+from ..nn.common import ModelConfig, SSMConfig, SparsityConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m",
+        n_layers=24,
+        block_kind="mamba",
+        d_model=768,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=1,
+        d_ff=0,
+        vocab_size=50280,
+        max_seq_len=1048576,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk=256),
+        tie_embeddings=True,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=4, d_model=64, vocab_size=512, max_seq_len=512,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk=16),
+        loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

@@ -1,0 +1,47 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048, Mamba2 backbone (ssm_state=64)
+plus a single *shared* attention block (32H, kv=32, d_ff=8192) applied every
+6 layers over [hidden, embedding] concatenated input. [arXiv:2411.15242; hf]
+
+38 = 6 units x 6 mamba layers (each unit followed by one application of the
+shared block) + 2 epilogue mamba layers. Long-context (500k decode) runs:
+the backbone state is O(1); only the 6 shared applications keep KV.
+"""
+from ..nn.common import (HybridConfig, ModelConfig, SSMConfig,
+                         SparsityConfig)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        n_layers=38,
+        block_kind="mamba",
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=128,   # shared block: qk over 2*d_model concat input
+        d_ff=8192,      # shared block FFN
+        vocab_size=32000,
+        max_seq_len=524288,
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk=256),
+        hybrid=HybridConfig(period=6, shared_d_ff=8192,
+                            concat_embedding=True),
+        act="gelu",
+        ffn_gated=True,
+        tie_embeddings=True,
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=128, vocab_size=512, max_seq_len=512,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk=16),
+        hybrid=HybridConfig(period=2, shared_d_ff=128,
+                            concat_embedding=True),
+        attn_chunk=16, loss_chunk=16, dtype="float32",
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                block_in=16, block_out=16),
+    )

@@ -1,0 +1,44 @@
+"""repro.core — the paper's contribution: pre-defined sparsity.
+
+Public API:
+
+* pattern generation/validation: ``make_pattern``, ``clashfree_schedule``,
+  ``schedule_is_clash_free``, ``possible_densities``, ...
+* block-level lifting for TPU: ``make_block_pattern``, ``BlockPattern``
+* the junction module: ``SparseLinear``, ``SparseLinearSpec``
+* hardware storage model: ``storage_cost``, ``junction_cycles``
+"""
+from .sparsity import (  # noqa: F401
+    JunctionSpec,
+    JunctionPattern,
+    possible_densities,
+    quantize_density,
+    degrees_for_density,
+    make_pattern,
+    random_pattern,
+    structured_pattern,
+    clashfree_pattern,
+    clashfree_schedule,
+    schedule_is_clash_free,
+    pattern_from_schedule,
+    in_degrees,
+    out_degrees,
+    disconnected_left,
+    disconnected_right,
+    to_mask,
+    transpose_pattern,
+    count_access_patterns,
+)
+from .block_pattern import BlockPattern, make_block_pattern  # noqa: F401
+from .sparse_linear import (  # noqa: F401
+    SparseLinear,
+    SparseLinearSpec,
+    gather_apply,
+    block_gather_apply,
+    block_scatter_apply,
+    masked_dense_apply,
+    gather_weights_to_dense,
+    block_weights_to_dense,
+    dense_weights_to_gather,
+)
+from .storage import StorageBreakdown, storage_cost, junction_cycles, balanced_z  # noqa: F401

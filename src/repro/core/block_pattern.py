@@ -1,0 +1,124 @@
+"""Block-level pre-defined sparsity — the TPU-native adaptation.
+
+The paper's clash-free generators (``repro.core.sparsity``) operate on
+*neurons*; a TPU's natural unit of edge-parallelism is a (bL x bR) MXU tile
+("z edges in parallel" -> "one 128x128 tile per MXU issue", DESIGN.md §2).
+Lifting the generator from neurons to *blocks* keeps the entire pattern
+family (type 1/2/3 seeds, dithering, clash-freedom) and makes every surviving
+"edge" a dense tile: compute and HBM traffic scale with density while the MXU
+stays fully utilized.
+
+``BlockPattern`` carries both adjacency directions:
+
+* ``block_idx[rb, f]``  — left block feeding fan-in slot ``f`` of right block
+  ``rb`` (gather / column-parallel form);
+* ``out_idx[lb, g], out_slot[lb, g]`` — the (right block, fan-in slot) pairs
+  fed by left block ``lb`` (scatter / row-parallel form, used for the
+  row-parallel down-projection and for dx in the backward pass).
+
+Clash-freedom at block level means: in grid step ``t`` the ``z_b`` parallel
+tile-processors read ``z_b`` *distinct* left blocks — i.e. no VMEM tile is
+streamed twice in one step (the HBM-bandwidth analogue of the paper's
+SRAM-port clash).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import sparsity
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPattern:
+    """Pre-defined block-sparse pattern for an (n_in x n_out) junction."""
+
+    n_in: int
+    n_out: int
+    block_in: int   # bL
+    block_out: int  # bR
+    block_idx: np.ndarray  # (n_rb, d_in_b) int32 — gather form
+    out_idx: np.ndarray    # (n_lb, d_out_b) int32 — scatter form: right block
+    out_slot: np.ndarray   # (n_lb, d_out_b) int32 — scatter form: fan-in slot
+    meta: dict = dataclasses.field(default_factory=dict, compare=False)
+
+    @property
+    def n_lb(self) -> int:
+        return self.n_in // self.block_in
+
+    @property
+    def n_rb(self) -> int:
+        return self.n_out // self.block_out
+
+    @property
+    def d_in_b(self) -> int:
+        return int(self.block_idx.shape[1])
+
+    @property
+    def d_out_b(self) -> int:
+        return int(self.out_idx.shape[1])
+
+    @property
+    def density(self) -> float:
+        return self.d_in_b / self.n_lb
+
+    @property
+    def n_weight_elems(self) -> int:
+        return self.n_rb * self.d_in_b * self.block_in * self.block_out
+
+    def to_block_mask(self) -> np.ndarray:
+        """(n_lb, n_rb) 0/1 block adjacency."""
+        m = np.zeros((self.n_lb, self.n_rb), dtype=np.float32)
+        j = np.repeat(np.arange(self.n_rb), self.d_in_b)
+        m[self.block_idx.reshape(-1), j] = 1.0
+        return m
+
+    def to_mask(self) -> np.ndarray:
+        """Full (n_in, n_out) element mask (for oracle checks)."""
+        bm = self.to_block_mask()
+        return np.kron(bm, np.ones((self.block_in, self.block_out),
+                                   dtype=np.float32))
+
+
+def make_block_pattern(
+    n_in: int,
+    n_out: int,
+    rho: float,
+    *,
+    block_in: int = 128,
+    block_out: int = 128,
+    method: str = "clashfree",
+    seed: int = 0,
+    cf_type: int = 1,
+    dither: bool = False,
+    z: Optional[int] = None,
+) -> BlockPattern:
+    """Lift the paper's pattern generator to block granularity.
+
+    Density is quantized to multiples of ``1/gcd(n_lb, n_rb)`` exactly as in
+    Appendix A, now over block counts. ``rho=1`` (or n_lb==d_in_b) degrades
+    gracefully to a fully-connected junction — the paper's §III-E special
+    case.
+    """
+    if n_in % block_in or n_out % block_out:
+        raise ValueError(
+            f"block sizes must divide junction dims: ({n_in},{n_out}) vs "
+            f"({block_in},{block_out})")
+    n_lb, n_rb = n_in // block_in, n_out // block_out
+    pat = sparsity.make_pattern(
+        n_lb, n_rb, rho, method=method, seed=seed, cf_type=cf_type,
+        dither=dither, z=z)
+    if pat.method == "random":
+        raise ValueError("block mode requires fixed-degree (structured or "
+                         "clash-free) patterns")
+    block_idx = pat.idx  # (n_rb, d_in_b)
+    ridx = sparsity.transpose_pattern(pat)  # (n_lb, d_out_b, 2)
+    return BlockPattern(
+        n_in=n_in, n_out=n_out, block_in=block_in, block_out=block_out,
+        block_idx=block_idx.astype(np.int32),
+        out_idx=ridx[:, :, 0].astype(np.int32),
+        out_slot=ridx[:, :, 1].astype(np.int32),
+        meta=dict(pat.meta, method=pat.method, seed=seed),
+    )

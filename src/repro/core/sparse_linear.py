@@ -1,0 +1,252 @@
+"""Pre-defined sparse linear layers (the paper's junction, as a JAX module).
+
+Three execution modes, one statistical family:
+
+* ``mask``   — dense weight * fixed 0/1 mask. Bit-exact reproduction of the
+               paper's training dynamics (the gradient of a masked weight is
+               the masked gradient, eq. (4b) restricted to existing edges).
+               Runs at dense speed; used by the paper-repro benchmarks and as
+               the oracle for everything else.
+* ``gather`` — weights stored compactly ``(n_out, d_in)`` with the index
+               pattern ``idx[j, f]``; compute and storage scale with density.
+               This is the literal per-edge formulation of eq. (2a).
+* ``block``  — TPU-native block-circulant form (``BlockPattern``): weights
+               ``(n_rb, d_in_b, bL, bR)``. Two algebraically equivalent
+               applications:
+               - *gather* (column-parallel): each right block pulls its
+                 ``d_in_b`` left blocks — output sharding friendly;
+               - *scatter* (row-parallel): each left block pushes into the
+                 right blocks it feeds (segment-sum) — input sharding
+                 friendly, yields partial sums that GSPMD turns into the
+                 Megatron-style all-reduce.
+
+All modes share initialization: He/fan-in scaling with the *actual* in-degree
+(d_in, not n_in), matching the paper's use of He init on sparse junctions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sparsity
+from .block_pattern import BlockPattern, make_block_pattern
+
+Mode = Literal["mask", "gather", "block_gather", "block_scatter", "dense"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearSpec:
+    """Static configuration of one sparse junction."""
+
+    n_in: int
+    n_out: int
+    rho: float = 1.0
+    mode: Mode = "block_gather"
+    method: str = "clashfree"   # pattern family (clashfree|structured|random)
+    block_in: int = 128
+    block_out: int = 128
+    cf_type: int = 1
+    dither: bool = False
+    seed: int = 0
+    use_bias: bool = True
+    dtype: str = "float32"
+
+    def pattern(self) -> sparsity.JunctionPattern:
+        return sparsity.make_pattern(
+            self.n_in, self.n_out, self.rho, method=self.method,
+            seed=self.seed, cf_type=self.cf_type, dither=self.dither)
+
+    def block_pattern(self) -> BlockPattern:
+        return make_block_pattern(
+            self.n_in, self.n_out, self.rho, block_in=self.block_in,
+            block_out=self.block_out, method=self.method, seed=self.seed,
+            cf_type=self.cf_type, dither=self.dither)
+
+
+class SparseLinear:
+    """Functional module: ``layer = SparseLinear(spec); p = layer.init(key);
+    y = layer(p, x)``. The pattern is a compile-time constant (numpy),
+    never a traced value — exactly the paper's 'pre-defined' property.
+    """
+
+    def __init__(self, spec: SparseLinearSpec):
+        self.spec = spec
+        self.dtype = jnp.dtype(spec.dtype)
+        if spec.mode == "dense" or (spec.rho >= 1.0 and spec.mode != "gather"):
+            self._mode = "dense"
+            self.pattern = None
+        elif spec.mode in ("mask", "gather"):
+            self._mode = spec.mode
+            self.pattern = spec.pattern()
+            if spec.mode == "gather" and self.pattern.method == "random":
+                raise ValueError("gather mode requires fixed degrees")
+        elif spec.mode in ("block_gather", "block_scatter"):
+            self._mode = spec.mode
+            self.pattern = spec.block_pattern()
+        else:
+            raise ValueError(f"unknown mode {spec.mode}")
+
+    # -- initialization ----------------------------------------------------
+
+    def init(self, key: jax.Array) -> dict:
+        s = self.spec
+        kw, _ = jax.random.split(key)
+        params = {}
+        if self._mode == "dense":
+            fan_in = s.n_in
+            w = jax.random.normal(kw, (s.n_in, s.n_out), self.dtype)
+            params["w"] = w * np.sqrt(2.0 / fan_in)
+        elif self._mode == "mask":
+            pat = self.pattern
+            fan_in = max(1, pat.n_edges // s.n_out)
+            w = jax.random.normal(kw, (s.n_in, s.n_out), self.dtype)
+            params["w"] = w * np.sqrt(2.0 / fan_in)
+        elif self._mode == "gather":
+            d_in = self.pattern.d_in
+            w = jax.random.normal(kw, (s.n_out, d_in), self.dtype)
+            params["w"] = w * np.sqrt(2.0 / d_in)
+        else:  # block modes
+            bp: BlockPattern = self.pattern
+            fan_in = bp.d_in_b * bp.block_in
+            w = jax.random.normal(
+                kw, (bp.n_rb, bp.d_in_b, bp.block_in, bp.block_out),
+                self.dtype)
+            params["w"] = w * np.sqrt(2.0 / fan_in)
+        if s.use_bias:
+            params["b"] = jnp.zeros((s.n_out,), self.dtype)
+        return params
+
+    # -- forward -----------------------------------------------------------
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        s = self.spec
+        w = params["w"]
+        if self._mode == "dense":
+            y = x @ w
+        elif self._mode == "mask":
+            mask = jnp.asarray(sparsity.to_mask(self.pattern), w.dtype)
+            y = x @ (w * mask)
+        elif self._mode == "gather":
+            y = gather_apply(x, w, self.pattern.idx)
+        elif self._mode == "block_gather":
+            y = block_gather_apply(x, w, self.pattern.block_idx,
+                                   self.pattern.block_in,
+                                   self.pattern.block_out)
+        else:  # block_scatter
+            y = block_scatter_apply(x, w, self.pattern.out_idx,
+                                    self.pattern.out_slot,
+                                    self.pattern.block_in,
+                                    self.pattern.block_out)
+        if s.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    # -- bookkeeping -------------------------------------------------------
+
+    @property
+    def n_weights(self) -> int:
+        """Stored weight count — the paper's |W_i| (Table I)."""
+        if self._mode == "dense":
+            return self.spec.n_in * self.spec.n_out
+        if self._mode == "mask":
+            return self.pattern.n_edges  # logical; physical storage is dense
+        if self._mode == "gather":
+            return int(self.pattern.idx.size)
+        return self.pattern.n_weight_elems
+
+
+# ---------------------------------------------------------------------------
+# Pure functions (jit/pjit friendly; patterns enter as static numpy constants)
+# ---------------------------------------------------------------------------
+
+
+def gather_apply(x: jax.Array, w: jax.Array, idx: np.ndarray) -> jax.Array:
+    """Eq. (2a): h[..., j] = sum_f w[j, f] * x[..., idx[j, f]]."""
+    idx = jnp.asarray(idx)  # (n_out, d_in)
+    xg = jnp.take(x, idx.reshape(-1), axis=-1)  # (..., n_out*d_in)
+    xg = xg.reshape(x.shape[:-1] + idx.shape)
+    return jnp.einsum("...jf,jf->...j", xg, w)
+
+
+def block_gather_apply(x: jax.Array, w: jax.Array, block_idx: np.ndarray,
+                       bl: int, br: int) -> jax.Array:
+    """Column-parallel block-sparse matmul.
+
+    x: (..., n_in) -> (..., n_out); w: (n_rb, d_in_b, bL, bR).
+    """
+    n_rb, d_in_b = block_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (-1, bl))  # (..., n_lb, bL)
+    g = jnp.take(xb, jnp.asarray(block_idx.reshape(-1)), axis=-2)
+    g = g.reshape(lead + (n_rb, d_in_b, bl))
+    y = jnp.einsum("...rfl,rflo->...ro", g, w)
+    return y.reshape(lead + (n_rb * br,))
+
+
+def block_scatter_apply(x: jax.Array, w: jax.Array, out_idx: np.ndarray,
+                        out_slot: np.ndarray, bl: int, br: int) -> jax.Array:
+    """Row-parallel block-sparse matmul (scatter/segment-sum form).
+
+    Each left block lb pushes ``x_b[lb] @ w[out_idx[lb,g], out_slot[lb,g]]``
+    into right block ``out_idx[lb, g]``. Algebraically identical to
+    ``block_gather_apply``; the different dataflow gives GSPMD the
+    row-parallel (input-sharded, output-all-reduced) lowering.
+    """
+    n_lb, d_out_b = out_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (n_lb, bl))
+    # wt[lb, g] = w[out_idx[lb,g], out_slot[lb,g]]  (n_lb, d_out_b, bL, bR)
+    wt = w[jnp.asarray(out_idx), jnp.asarray(out_slot)]
+    p = jnp.einsum("...li,lgio->...lgo", xb, wt)
+    # scatter-add partial products into right blocks
+    seg = jnp.asarray(out_idx.reshape(-1))  # (n_lb*d_out_b,)
+    n_rb = int(out_idx.max()) + 1
+    pf = p.reshape(lead + (n_lb * d_out_b, br))
+    y = jax.ops.segment_sum(
+        jnp.moveaxis(pf, -2, 0), seg, num_segments=n_rb)
+    y = jnp.moveaxis(y, 0, -2)
+    return y.reshape(lead + (n_rb * br,))
+
+
+def masked_dense_apply(x: jax.Array, w: jax.Array,
+                       mask: np.ndarray) -> jax.Array:
+    """Oracle: dense matmul against the masked weight."""
+    return x @ (w * jnp.asarray(mask, w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layout conversions (for cross-mode equivalence tests and checkpoints)
+# ---------------------------------------------------------------------------
+
+
+def gather_weights_to_dense(w: jax.Array, idx: np.ndarray,
+                            n_in: int) -> jax.Array:
+    """(n_out, d_in) compact weights -> (n_in, n_out) dense-with-zeros."""
+    n_out, d_in = idx.shape
+    dense = jnp.zeros((n_in, n_out), w.dtype)
+    j = jnp.repeat(jnp.arange(n_out), d_in)
+    return dense.at[jnp.asarray(idx.reshape(-1)), j].add(w.reshape(-1))
+
+
+def block_weights_to_dense(w: jax.Array, bp: BlockPattern) -> jax.Array:
+    """(n_rb, d_in_b, bL, bR) -> (n_in, n_out) dense-with-zeros."""
+    dense = jnp.zeros((bp.n_in, bp.n_out), w.dtype)
+    for rb in range(bp.n_rb):
+        for f in range(bp.d_in_b):
+            lb = int(bp.block_idx[rb, f])
+            dense = dense.at[lb * bp.block_in:(lb + 1) * bp.block_in,
+                             rb * bp.block_out:(rb + 1) * bp.block_out
+                             ].set(w[rb, f])
+    return dense
+
+
+def dense_weights_to_gather(w_dense: jax.Array, idx: np.ndarray) -> jax.Array:
+    """(n_in, n_out) -> (n_out, d_in) compact, reading pattern positions."""
+    n_out, d_in = idx.shape
+    j = jnp.repeat(jnp.arange(n_out), d_in)
+    return w_dense[jnp.asarray(idx.reshape(-1)), j].reshape(n_out, d_in)

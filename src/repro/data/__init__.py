@@ -1,0 +1,2 @@
+"""repro.data — deterministic resumable pipelines + paper-repro datasets."""
+from .synthetic import BigramLM, synthetic_mnist, synthetic_features  # noqa: F401

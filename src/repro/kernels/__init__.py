@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+* ``csd_spmm``        — the paper's contribution: clash-free structured
+                        pre-defined sparse matmul (fwd / dx / dw).
+* ``flash_attention`` — serving/prefill attention hot path.
+* ``ops``             — differentiable jit'd wrappers with backend dispatch.
+* ``ref``             — pure-jnp oracles (the correctness contract).
+"""
+from .ops import csd_matmul  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,221 @@
+"""CSD-SpMM — Clash-free Structured pre-Defined Sparse Matrix Multiply.
+
+Pallas/TPU kernels for the block-circulant pre-defined sparse junction
+(DESIGN.md §2). This is the compute hot-spot the paper accelerates: eq. (2a)
+forward, eq. (3b) backward-data, eq. (4b) backward-weights — lifted from
+per-edge FPGA processing to per-tile MXU processing.
+
+Mapping of the paper's architecture onto the TPU grid:
+
+* the ``z`` parallel edge processors  -> one (block_m x bR) output tile per
+  grid step; every MXU issue covers bL*bR "edges";
+* the ``z`` banked activation SRAMs   -> VMEM tiles of ``x`` selected by the
+  *scalar-prefetched* pattern ``block_idx`` (the interleaved-order access of
+  Fig. 2(b): the index map plays the role of the address generator built
+  from the seed vector ``phi``);
+* clash-freedom                       -> each grid step streams exactly one
+  left block from HBM; a left block is never double-streamed within a step,
+  and consecutive ``f`` steps revisit the same *output* tile so the partial
+  sum stays resident in VMEM (the "natural order" write of Fig. 2(b)).
+
+Weight layout: ``w[n_rb, d_in_b, bL, bR]`` — right-block major, exactly the
+paper's edge numbering (§III-B: "edges are numbered sequentially ... on the
+right side of the junction").
+
+All kernels are validated against ``ref.py`` in interpret mode (CPU) by
+``tests/test_kernels.py``; on real TPUs the same code path compiles to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Forward: y[m, rb] = sum_f x[m, block_idx[rb, f]] @ w[rb, f]
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(idx_ref, x_ref, w_ref, y_ref, *, d_in_b: int):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]  # (block_m, bL)
+    w = w_ref[0, 0]  # (bL, bR)
+    y_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=y_ref.dtype)
+
+
+def csd_spmm_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    block_idx: np.ndarray,
+    *,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Forward block-sparse matmul.
+
+    x: (M, n_in) with n_in = n_lb*bL; w: (n_rb, d_in_b, bL, bR);
+    block_idx: (n_rb, d_in_b) int32 -> y: (M, n_rb*bR).
+    """
+    m, n_in = x.shape
+    n_rb, d_in_b, bl, br = w.shape
+    if n_in % bl:
+        raise ValueError("n_in not divisible by block_in")
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float32) else x.dtype
+
+    grid = (m // block_m, n_rb, d_in_b)
+    kernel = functools.partial(_fwd_kernel, d_in_b=d_in_b)
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # x tile: row-block i, left-block chosen by the pattern.
+                pl.BlockSpec((block_m, bl),
+                             lambda i, r, f, idx: (i, idx[r, f])),
+                # w tile: one (bL, bR) block per (r, f).
+                pl.BlockSpec((1, 1, bl, br),
+                             lambda i, r, f, idx: (r, f, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, br),
+                                   lambda i, r, f, idx: (i, r)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_rb * br), acc_dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_idx, jnp.int32), x, w)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward-data: dx[m, lb] = sum_g dy[m, out_idx[lb, g]] @ w[out_idx, out_slot].T
+# (eq. (3b): the transpose pattern is itself structured — degrees swap)
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(oidx_ref, oslot_ref, dy_ref, w_ref, dx_ref):
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dy = dy_ref[...]  # (block_m, bR)
+    w = w_ref[0, 0]  # (bL, bR)
+    dx_ref[...] += jax.lax.dot_general(
+        dy, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=dx_ref.dtype)
+
+
+def csd_spmm_dx(
+    dy: jax.Array,
+    w: jax.Array,
+    out_idx: np.ndarray,
+    out_slot: np.ndarray,
+    *,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dx: (M, n_in). dy: (M, n_rb*bR); the scatter pattern arrays come from
+    ``BlockPattern.out_idx/out_slot`` (reverse adjacency)."""
+    m, _ = dy.shape
+    n_rb, d_in_b, bl, br = w.shape
+    n_lb, d_out_b = out_idx.shape
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    acc_dtype = jnp.float32 if dy.dtype in (jnp.bfloat16, jnp.float32) else dy.dtype
+
+    grid = (m // block_m, n_lb, d_out_b)
+    dx = pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, br),
+                             lambda i, l, g, oidx, oslot: (i, oidx[l, g])),
+                pl.BlockSpec((1, 1, bl, br),
+                             lambda i, l, g, oidx, oslot:
+                             (oidx[l, g], oslot[l, g], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, bl),
+                                   lambda i, l, g, oidx, oslot: (i, l)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_lb * bl), acc_dtype),
+        interpret=interpret,
+    )(jnp.asarray(out_idx, jnp.int32), jnp.asarray(out_slot, jnp.int32),
+      dy, w)
+    return dx.astype(dy.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward-weights: dw[rb, f] = x[:, block_idx[rb, f]].T @ dy[:, rb]
+# (eq. (4b) per tile, accumulated over the batch)
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(idx_ref, x_ref, dy_ref, dw_ref):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    x = x_ref[...]  # (block_m, bL)
+    dy = dy_ref[...]  # (block_m, bR)
+    dw_ref[0, 0] += jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=dw_ref.dtype)
+
+
+def csd_spmm_dw(
+    x: jax.Array,
+    dy: jax.Array,
+    block_idx: np.ndarray,
+    *,
+    block_in: int,
+    block_out: int,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dw: (n_rb, d_in_b, bL, bR), batch-accumulated (innermost grid dim)."""
+    m, n_in = x.shape
+    n_rb, d_in_b = block_idx.shape
+    bl, br = block_in, block_out
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+
+    grid = (n_rb, d_in_b, m // block_m)
+    dw = pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, bl),
+                             lambda r, f, i, idx: (i, idx[r, f])),
+                pl.BlockSpec((block_m, br),
+                             lambda r, f, i, idx: (i, r)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bl, br),
+                                   lambda r, f, i, idx: (r, f, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_rb, d_in_b, bl, br), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_idx, jnp.int32), x, dy)
+    return dw.astype(x.dtype)

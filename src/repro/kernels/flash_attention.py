@@ -1,0 +1,144 @@
+"""Flash attention (Pallas/TPU) — forward kernel for the serving hot path.
+
+Supports the features the assigned architectures need: causal masking, GQA
+(kv-head grouping via the index map), sliding-window attention (gemma2/3
+local layers), logit soft-capping (gemma2), and a ``q_offset`` for decode
+(query positions offset against an existing KV cache).
+
+Online-softmax over KV blocks (the standard flash recurrence): running
+row-max ``m``, normalizer ``l`` and f32 accumulator live in VMEM scratch
+(TPU-shaped: trailing dim 128). Out-of-window KV blocks are masked; on real
+hardware the compiler hoists fully-masked blocks' loads are still issued —
+the XLA chunked implementation in ``repro.nn.attention`` (used for
+GSPMD-partitioned training and the dry-run) skips them structurally instead.
+
+Validated in interpret mode against ``ref.mha_ref`` over shape/dtype sweeps
+(``tests/test_kernels.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  q_offset: int, kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0) \
+        + q_offset
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                        # (block_q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    # fully-masked rows: zero out (m_new stays -inf; exp(-inf - -inf)=nan)
+    p = jnp.where(m_new > _NEG_INF / 2, p, 0.0)
+    corr = jnp.where(m_prev > _NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    l_new = corr * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+
+    v = v_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,  # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention forward. Layout (B, S, H, Dh); returns like ``q``."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    groups = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError("sequence lengths must divide block sizes")
+
+    # (B, S, H, D) -> (B, H, S, D) for blocking over seq
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    grid = (b, hq, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=logit_softcap, block_q=block_q, block_k=block_k,
+        q_offset=q_offset, kv_blocks=skv // block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bb, h, qi, ki: (bb, h // groups, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bb, h, qi, ki: (bb, h // groups, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the ground truth the kernels are swept against in
+``tests/test_kernels.py``. No Pallas, no custom control flow — plain jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- csd_spmm ---------------------------------------------------------------
+
+
+def csd_spmm_fwd_ref(x: jax.Array, w: jax.Array,
+                     block_idx: np.ndarray) -> jax.Array:
+    """y[m, rb*bR] = sum_f x_blocks[block_idx[rb,f]] @ w[rb,f]."""
+    n_rb, d_in_b, bl, br = w.shape
+    m = x.shape[0]
+    xb = x.reshape(m, -1, bl)
+    g = jnp.take(xb, jnp.asarray(block_idx.reshape(-1)), axis=1)
+    g = g.reshape(m, n_rb, d_in_b, bl)
+    y = jnp.einsum("mrfl,rflo->mro", g.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.reshape(m, n_rb * br).astype(x.dtype)
+
+
+def csd_spmm_dx_ref(dy: jax.Array, w: jax.Array, out_idx: np.ndarray,
+                    out_slot: np.ndarray) -> jax.Array:
+    n_rb, d_in_b, bl, br = w.shape
+    n_lb, d_out_b = out_idx.shape
+    m = dy.shape[0]
+    dyb = dy.reshape(m, n_rb, br)
+    dyg = jnp.take(dyb, jnp.asarray(out_idx.reshape(-1)), axis=1)
+    dyg = dyg.reshape(m, n_lb, d_out_b, br)
+    wt = w[jnp.asarray(out_idx), jnp.asarray(out_slot)]  # (n_lb, d_out_b, bL, bR)
+    dx = jnp.einsum("mlgo,lgio->mli", dyg.astype(jnp.float32),
+                    wt.astype(jnp.float32))
+    return dx.reshape(m, n_lb * bl).astype(dy.dtype)
+
+
+def csd_spmm_dw_ref(x: jax.Array, dy: jax.Array, block_idx: np.ndarray,
+                    block_in: int, block_out: int) -> jax.Array:
+    n_rb, d_in_b = block_idx.shape
+    m = x.shape[0]
+    xb = x.reshape(m, -1, block_in)
+    dyb = dy.reshape(m, n_rb, block_out)
+    g = jnp.take(xb, jnp.asarray(block_idx.reshape(-1)), axis=1)
+    g = g.reshape(m, n_rb, d_in_b, block_in)
+    dw = jnp.einsum("mrfi,mro->rfio", g.astype(jnp.float32),
+                    dyb.astype(jnp.float32))
+    return dw.astype(x.dtype)
+
+
+# -- flash attention --------------------------------------------------------
+
+
+def mha_ref(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,  # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,      # sliding-window size (None = full)
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,              # absolute position of q[0] (decode)
+) -> jax.Array:
+    """Reference GQA attention with optional sliding window and softcap."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    groups = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, groups, axis=2)
+    vf = jnp.repeat(vf, groups, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+"""repro.launch — mesh construction, dry-run, train/serve drivers.
+
+NOTE: ``dryrun`` must be executed as its own process (it sets XLA_FLAGS
+before importing jax); do not import it from library code.
+"""
+from .mesh import make_production_mesh, make_mesh  # noqa: F401
+from . import specs, analysis  # noqa: F401

@@ -1,0 +1,131 @@
+"""Compiled-artifact analysis: collective-byte extraction + roofline terms.
+
+The dry-run compiles per-device SPMD modules, so ``cost_analysis()`` FLOPs /
+bytes and the collective bytes parsed from the HLO text are all *per chip*.
+Roofline terms (TPU v5e targets):
+
+    compute_s    = flops_per_chip / 197e12         (bf16 MXU peak)
+    memory_s     = bytes_per_chip / 819e9           (HBM bandwidth)
+    collective_s = coll_bytes_per_chip / 50e9       (per-link ICI)
+
+The dominant term is the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-chip bytes moved by each collective kind, from HLO text.
+
+    For each collective instruction (skipping ``-done`` halves of async
+    pairs) we count max(input bytes, output bytes) — all-gather's cost is
+    its output, reduce-scatter's its input.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "fusion" in stripped[:60]:
+            continue
+        for kind in _COLLECTIVES:
+            tok = f" {kind}("
+            tok_start = f" {kind}-start("
+            if tok in stripped or tok_start in stripped:
+                eq = stripped.find("= ")
+                if eq < 0:
+                    continue
+                opname = tok_start if tok_start in stripped else tok
+                op_at = stripped.find(opname)
+                out_shapes = _SHAPE_RE.findall(stripped[eq:op_at])
+                in_shapes = _SHAPE_RE.findall(stripped[op_at:])
+                b_out = sum(_shape_bytes(d, s) for d, s in out_shapes)
+                b_in = sum(_shape_bytes(d, s) for d, s in in_shapes)
+                out[kind] += max(b_in, b_out)
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline(flops: float, bytes_accessed: float, coll_bytes: float,
+             *, model_flops_per_chip: Optional[float] = None) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    result = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+    }
+    if model_flops_per_chip is not None and flops > 0:
+        result["model_flops_per_chip"] = model_flops_per_chip
+        result["useful_flop_ratio"] = model_flops_per_chip / flops
+        # fraction of roofline: useful work at peak vs the binding term
+        result["roofline_fraction"] = (
+            model_flops_per_chip / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return result
+
+
+def model_flops(cfg, n_params: int, n_embed_params: int, shape,
+                n_active_params: Optional[int] = None) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = non-embedding params
+    (active params for MoE)."""
+    n = (n_active_params if n_active_params is not None
+         else n_params) - n_embed_params
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def count_embed_params(params_struct) -> int:
+    import jax
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_struct)[0]:
+        keys = [getattr(p, "key", "") for p in path]
+        if "table" in keys or "head" in keys or "embed" in keys:
+            total += leaf.size
+    return total
+
+
+def moe_active_params(cfg, n_params: int) -> Optional[int]:
+    """Approximate active params for MoE archs: experts scaled k/E."""
+    if cfg.moe is None:
+        return None
+    mc = cfg.moe
+    d, de = cfg.d_model, mc.d_expert
+    per_expert = 3 * d * de
+    n_moe_layers = cfg.n_layers - (1 if mc.first_layer_dense else 0)
+    routed_total = mc.n_routed * per_expert * n_moe_layers
+    routed_active = mc.top_k * per_expert * n_moe_layers
+    return n_params - routed_total + routed_active

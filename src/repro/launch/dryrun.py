@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove memory fits, and extract roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import — jax locks the device count at first init)::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --multi-pod
+
+Results (memory_analysis, cost_analysis, per-kind collective bytes,
+roofline terms) are cached as JSON under experiments/dryrun/. The roofline
+table in EXPERIMENTS.md §Roofline is generated from these files by
+``benchmarks/roofline.py``.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCHS, canonical, get_config, shapes_for  # noqa: E402
+from ..nn import build_model  # noqa: E402
+from ..nn.common import SHAPES, mesh_context  # noqa: E402
+from ..optim import AdamWConfig  # noqa: E402
+from ..sharding import policy  # noqa: E402
+from . import analysis, hlo_cost, specs  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True,
+             save_hlo_dir: str = "experiments/hlo") -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+    rules = policy.rules_for(shape.kind, shape.global_batch, mesh, cfg)
+
+    params_struct = specs.abstract_params(model)
+    pspec = policy.param_pspecs(model.spec(), rules)
+    p_sh = policy.named(mesh, pspec, params_struct)
+    inp = specs.input_specs(cfg, shape, model)
+
+    with mesh, mesh_context(mesh, rules):
+        if shape.kind == "train":
+            opt_struct = specs.abstract_opt(params_struct)
+            o_sh = policy.named(mesh, policy.opt_pspecs(pspec), opt_struct)
+            b_sh = policy.named(mesh,
+                                policy.batch_pspecs(inp["batch"], rules),
+                                inp["batch"])
+            step = specs.make_train_step(model, AdamWConfig())
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_struct, opt_struct, inp["batch"])
+        elif shape.kind == "prefill":
+            b_sh = policy.named(mesh,
+                                policy.batch_pspecs(inp["batch"], rules),
+                                inp["batch"])
+            step = specs.make_prefill_step(model, shape.seq_len)
+            cache_struct = jax.eval_shape(step, params_struct, inp["batch"])
+            c_sh = policy.named(mesh,
+                                policy.cache_pspecs(cache_struct[1], rules),
+                                cache_struct[1])
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh),
+            ).lower(params_struct, inp["batch"])
+        else:  # decode
+            tok_sh = policy.named(
+                mesh, policy.batch_pspecs({"tokens": inp["token"]},
+                                          rules))["tokens"]
+            c_sh = policy.named(mesh,
+                                policy.cache_pspecs(inp["cache"], rules),
+                                inp["cache"])
+            step = specs.make_serve_step(model)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, tok_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            ).lower(params_struct, inp["token"], inp["cache"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"--- {arch} x {shape_name} ({'multi' if multi_pod else 'single'}-pod, {chips} chips)")
+        print(mem)
+        print({k: v for k, v in cost.items()
+               if k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    if save_hlo_dir:
+        import zstandard
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        zpath = os.path.join(
+            save_hlo_dir,
+            f"{canonical(arch)}__{shape_name}__"
+            f"{'multi' if multi_pod else 'single'}.hlo.zst")
+        with open(zpath, "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(
+                hlo.encode()))
+    # loop-aware rollup: cost_analysis() counts while bodies once; the
+    # layer-scan / flash / loss loops need trip-count multiplication
+    rolled = hlo_cost.analyze(hlo)
+    coll = rolled["collective_bytes"]
+
+    n_params = sum(x.size for x in jax.tree.leaves(params_struct))
+    n_embed = analysis.count_embed_params(params_struct)
+    n_active = analysis.moe_active_params(cfg, n_params)
+    mf_global = analysis.model_flops(cfg, n_params, n_embed, shape,
+                                     n_active)
+    roof = analysis.roofline(
+        float(rolled["flops"]),
+        float(rolled["bytes"]),
+        float(coll["total"]),
+        model_flops_per_chip=mf_global / chips)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "n_params": int(n_params),
+        "n_embed_params": int(n_embed),
+        "n_active_params": int(n_active) if n_active else None,
+        "memory_analysis": _mem_dict(mem),
+        "flops_per_chip": float(rolled["flops"]),
+        "bytes_per_chip": float(rolled["bytes"]),
+        "xla_cost_analysis": {
+            "flops_once": float(cost.get("flops", 0.0)),
+            "bytes_once": float(cost.get("bytes accessed", 0.0))},
+        "collective_bytes": {k: int(v) for k, v in coll.items()},
+        "roofline": roof,
+        "compile_seconds": time.time() - t0,
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print({k: result[k] for k in
+               ("flops_per_chip", "bytes_per_chip")},
+              "coll:", coll["total"], "dominant:", roof["dominant"],
+              f"compile {result['compile_seconds']:.1f}s")
+    return result
+
+
+def cell_path(out_dir: str, arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(out_dir, f"{canonical(arch)}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in shapes_for(a):
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape
+        cells = [(canonical(args.arch), args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        path = cell_path(args.out, arch, shape, args.multi_pod)
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {arch} x {shape} (cached)")
+            continue
+        try:
+            result = run_cell(arch, shape, multi_pod=args.multi_pod)
+            with open(path, "w") as f:
+                json.dump(result, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(cells)} cells "
+          f"({'multi' if args.multi_pod else 'single'}-pod)")
+
+
+if __name__ == "__main__":
+    main()

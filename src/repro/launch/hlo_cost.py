@@ -1,0 +1,327 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but the
+layer stack / flash-attention / loss-chunk loops execute their bodies tens
+to thousands of times — for a scanned 34-layer model the built-in numbers
+are ~30x low (verified in tests/test_hlo_cost.py). This module re-derives
+FLOPs, HBM bytes and per-kind collective bytes from the optimized HLO text
+with while-loops rolled up by their ``known_trip_count``:
+
+* FLOPs: dot/convolution instructions (2 x out_elems x contraction);
+  elementwise flops are ignored (matmul-dominated models; same convention
+  as XLA's own cost analysis which dominates on dots).
+* bytes: per instruction, operand + output buffer sizes — the standard
+  producer/consumer traffic model; fusion bodies are NOT recursed (their
+  internals live in registers/VMEM), the fusion call site's operands/outputs
+  are the HBM traffic.
+* collectives: operand/output max per instruction, by kind, multiplied
+  through loop trip counts.
+
+Rollup: ENTRY -> (while: trip x body + cond), (fusion: flops recursed,
+bytes at call site), (call: recursed), (conditional: max over branches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "add-dependency", "iota",
+               "partition-id", "replica-id"}
+
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_type: str          # text before the op token (output type)
+    args_text: str         # inside the op's parens
+    tail: str              # after the closing paren (attrs)
+
+    @property
+    def operands(self) -> List[str]:
+        return _OPERAND_RE.findall(self.args_text)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in _COLLECTIVES:
+            self.coll[k] += mult * other.coll[k]
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def _split_args(op_start: str) -> Tuple[str, str]:
+    """Given text starting at the op's '(' return (inside, tail)."""
+    depth = 0
+    for i, ch in enumerate(op_start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return op_start[1:i], op_start[i + 1:]
+    return op_start[1:], ""
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.shapes: Dict[str, str] = {}  # instr name -> output type text
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._ptraffic: Dict[str, Dict[int, float]] = {}
+
+    # -- parsing -------------------------------------------------------------
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        header_re = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{")
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hm = header_re.match(line)
+            if hm and not line.startswith(" "):
+                cur = hm.group(2)
+                self.comps[cur] = []
+                if hm.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, rest = im.group(2), im.group(3)
+            om = _OP_RE.search(rest)
+            if not om:
+                continue
+            op = om.group(1)
+            out_type = rest[:om.start()]
+            inside, tail = _split_args(rest[om.end() - 1:])
+            instr = Instr(name, op, out_type, inside, tail)
+            self.comps[cur].append(instr)
+            self.shapes[name] = out_type
+
+    # -- per-instruction ------------------------------------------------------
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out = _first_shape_dims(instr.out_type)
+        if out is None:
+            return 0.0
+        out_elems = 1
+        for d in out[1]:
+            out_elems *= d
+        lhs = instr.operands[0] if instr.operands else None
+        lhs_type = self.shapes.get(lhs, "")
+        lhs_shape = _first_shape_dims(lhs_type)
+        contract = 1
+        m = _LHS_CONTRACT_RE.search(instr.tail)
+        if m and lhs_shape:
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= lhs_shape[1][int(idx)]
+        return 2.0 * out_elems * contract
+
+    def _operand_bytes(self, instr: Instr) -> float:
+        total = 0
+        for name in instr.operands:
+            total += _type_bytes(self.shapes.get(name, ""))
+        return total
+
+    # -- slice-aware traffic ----------------------------------------------
+    #
+    # dynamic-slice / gather / dynamic-update-slice touch only the sliced
+    # region, not the whole operand. Counting full operands makes every
+    # scan iteration "read" the entire stacked-layers buffer — a layers^2
+    # overcount (measured ~100x on an 88-layer model).
+
+    _SLICERS = {"dynamic-slice", "gather"}
+
+    def _instr_bytes(self, instr: Instr) -> float:
+        op = instr.op
+        out_b = _type_bytes(instr.out_type)
+        ops_ = instr.operands
+        if op in self._SLICERS:
+            # read the sliced region + write the output (+ indices)
+            idx_b = sum(_type_bytes(self.shapes.get(n, ""))
+                        for n in ops_[1:])
+            return 2 * out_b + idx_b
+        if op == "dynamic-update-slice":
+            upd = _type_bytes(self.shapes.get(ops_[1], "")) if len(ops_) > 1 \
+                else out_b
+            return 3 * upd  # read region + read update + write region
+        if op == "scatter":
+            upd = _type_bytes(self.shapes.get(ops_[-1], "")) if ops_ else 0
+            idx = _type_bytes(self.shapes.get(ops_[1], "")) \
+                if len(ops_) > 2 else 0
+            return 3 * upd + idx
+        return out_b + self._operand_bytes(instr)
+
+    def _param_traffic(self, comp: str) -> Dict[int, float]:
+        """Per-parameter traffic of a fusion body: if a parameter is only
+        consumed by slicing ops, its traffic is the slice outputs, not the
+        full buffer (scan bodies slice their stacked inputs)."""
+        if comp in self._ptraffic:
+            return self._ptraffic[comp]
+        instrs = self.comps.get(comp, [])
+        param_of: Dict[str, int] = {}
+        for ins in instrs:
+            if ins.op == "parameter":
+                m = re.match(r"\s*(\d+)", ins.args_text)
+                if m:
+                    param_of[ins.name] = int(m.group(1))
+        uses: Dict[str, List[Instr]] = {}
+        for ins in instrs:
+            for o in ins.operands:
+                if o in param_of:
+                    uses.setdefault(o, []).append(ins)
+        out: Dict[int, float] = {}
+        for pname, pidx in param_of.items():
+            puses = uses.get(pname, [])
+            if puses and all(
+                    u.op in self._SLICERS and u.operands
+                    and u.operands[0] == pname for u in puses):
+                out[pidx] = sum(2 * _type_bytes(u.out_type) for u in puses)
+        self._ptraffic[comp] = out
+        return out
+
+    # -- rollup ----------------------------------------------------------------
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        cost = Cost()
+        self._memo[comp] = cost  # guards malformed recursion
+        for instr in self.comps.get(comp, []):
+            op = instr.op
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(instr.tail)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(instr.tail)
+                cm = _COND_RE.search(instr.tail)
+                if bm:
+                    cost.add(self.comp_cost(bm.group(1)), trip)
+                if cm:
+                    cost.add(self.comp_cost(cm.group(1)), trip + 1)
+            elif op == "fusion":
+                cm = _CALLS_RE.search(instr.tail)
+                b = _type_bytes(instr.out_type)
+                if cm:
+                    inner = self.comp_cost(cm.group(1))
+                    cost.flops += inner.flops       # dots inside fusions
+                    for k in _COLLECTIVES:
+                        cost.coll[k] += inner.coll[k]
+                    ptraf = self._param_traffic(cm.group(1))
+                    for i, name in enumerate(instr.operands):
+                        b += ptraf.get(
+                            i, _type_bytes(self.shapes.get(name, "")))
+                else:
+                    b += self._operand_bytes(instr)
+                cost.bytes += b
+            elif op in ("call", "async-start"):
+                cm = _CALLS_RE.search(instr.tail)
+                if cm:
+                    cost.add(self.comp_cost(cm.group(1)))
+                cost.bytes += (_type_bytes(instr.out_type)
+                               + self._operand_bytes(instr))
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(instr.tail)
+                if bm:
+                    branches = _OPERAND_RE.findall(bm.group(1))
+                    if branches:
+                        costs = [self.comp_cost(b) for b in branches]
+                        worst = max(costs, key=lambda c: c.flops + c.bytes)
+                        cost.add(worst)
+            elif op in ("dot", "convolution"):
+                cost.flops += self._dot_flops(instr)
+                cost.bytes += (_type_bytes(instr.out_type)
+                               + self._operand_bytes(instr))
+            elif op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                    any(op.startswith(c) for c in _COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                b_out = _type_bytes(instr.out_type)
+                b_in = self._operand_bytes(instr)
+                kind = next(c for c in _COLLECTIVES if op.startswith(c))
+                cost.coll[kind] += max(b_in, b_out)
+                cost.bytes += b_out + b_in
+            elif op in _SKIP_BYTES:
+                continue
+            else:
+                cost.bytes += self._instr_bytes(instr)
+        self._memo[comp] = cost
+        return cost
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCostModel(hlo_text).total()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": {**{k: cost.coll[k] for k in _COLLECTIVES},
+                             "total": cost.coll_total},
+    }

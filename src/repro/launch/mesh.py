@@ -1,0 +1,31 @@
+"""Production meshes. A FUNCTION, not a module constant, so importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS before
+any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    With more devices available than the mesh needs (the dry-run forces 512
+    host devices and then builds the single-pod 256-chip mesh), the first
+    prod(shape) devices are used.
+    """
+    import numpy as np
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small host-platform meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

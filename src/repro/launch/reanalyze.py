@@ -1,0 +1,70 @@
+"""Offline re-analysis of saved dry-run HLO.
+
+Every dry-run compile persists its optimized HLO to
+``experiments/hlo/<cell>.hlo.zst``; this tool re-derives roofline terms
+from those artifacts WITHOUT recompiling — so cost-model improvements (or
+alternative hardware constants) can be swept over all 66 cells in seconds::
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        [--hlo experiments/hlo] [--out experiments/dryrun] \
+        [--peak 197e12 --hbm 819e9 --link 50e9]
+
+Updates the roofline block of each matching dry-run JSON in place (the
+memory_analysis and n_params fields from the original compile are kept).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from . import analysis, hlo_cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="experiments/hlo")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--peak", type=float, default=analysis.PEAK_FLOPS)
+    ap.add_argument("--hbm", type=float, default=analysis.HBM_BW)
+    ap.add_argument("--link", type=float, default=analysis.LINK_BW)
+    args = ap.parse_args()
+
+    analysis.PEAK_FLOPS = args.peak
+    analysis.HBM_BW = args.hbm
+    analysis.LINK_BW = args.link
+
+    dctx = zstandard.ZstdDecompressor()
+    n = 0
+    for zpath in sorted(glob.glob(os.path.join(args.hlo, "*.hlo.zst"))):
+        cell = os.path.basename(zpath).replace(".hlo.zst", "")
+        jpath = os.path.join(args.out, f"{cell}.json")
+        if not os.path.exists(jpath):
+            print(f"skip {cell}: no dry-run JSON")
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        hlo = dctx.decompress(open(zpath, "rb").read()).decode()
+        rolled = hlo_cost.analyze(hlo)
+        mf_chip = rec["roofline"].get("model_flops_per_chip")
+        rec["flops_per_chip"] = rolled["flops"]
+        rec["bytes_per_chip"] = rolled["bytes"]
+        rec["collective_bytes"] = {k: int(v) for k, v in
+                                   rolled["collective_bytes"].items()}
+        rec["roofline"] = analysis.roofline(
+            rolled["flops"], rolled["bytes"],
+            rolled["collective_bytes"]["total"],
+            model_flops_per_chip=mf_chip)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"reanalyzed {cell}: dominant={rec['roofline']['dominant']} "
+              f"frac={rec['roofline'].get('roofline_fraction', 0):.4f}")
+    print(f"done: {n} cells")
+
+
+if __name__ == "__main__":
+    main()

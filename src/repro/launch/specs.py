@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` builds the abstract inputs for a cell:
+
+* train/prefill: token (and stub-frontend embedding) batches;
+* decode: one new token + the full KV/SSM cache ShapeDtypeStructs, built
+  with ``jax.eval_shape`` over the cache constructor.
+
+``step_fns`` returns the jit-able step callables the dry-run lowers:
+``train_step`` (loss+grad+AdamW update, donated), ``prefill_step`` and
+``serve_step`` (one token against the cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.common import ModelConfig, ShapeConfig, dtype_of
+from ..nn.model import EncDec, LM
+from ..optim import adam
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None
+                ) -> Dict[str, Any]:
+    """Abstract inputs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg)
+    needs_embeds = (cfg.input_mode == "embeddings"
+                    or cfg.enc_dec is not None)
+
+    if shape.kind == "train":
+        batch = {"tokens": _sd((b, s), jnp.int32),
+                 "labels": _sd((b, s), jnp.int32)}
+        if needs_embeds:
+            batch["embeds"] = _sd((b, s, cfg.frontend_dim), cdt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _sd((b, s), jnp.int32)}
+        if needs_embeds:
+            batch["embeds"] = _sd((b, s, cfg.frontend_dim), cdt)
+            if cfg.input_mode == "embeddings" and cfg.enc_dec is None:
+                del batch["tokens"]  # vlm/audio prefill is embeddings-only
+        return {"batch": batch}
+
+    # decode: one token + cache of capacity seq_len
+    assert model is not None
+    token = _sd((b, 1), jnp.int32)
+    if cfg.enc_dec is not None:
+        stack = model.decoder
+        enc_len = min(s, 4096)  # encoder output length for cross KV
+
+        def mk():
+            return {"layers": stack.init_cache(b, s, dtype_of(cfg),
+                                               enc_len=enc_len),
+                    "pos": jnp.zeros((), jnp.int32)}
+    else:
+        stack = model.stack
+
+        def mk():
+            return {"layers": stack.init_cache(b, s, dtype_of(cfg)),
+                    "pos": jnp.zeros((), jnp.int32)}
+
+    cache = jax.eval_shape(mk)
+    return {"token": token, "cache": cache}
+
+
+def make_train_step(model, opt_cfg: adam.AdamWConfig):
+    def train_step(params, opt, batch):
+        (loss, metrics), g = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt, om = adam.update(opt_cfg, g, opt, params)
+        return params, opt, dict(metrics, **om)
+    return train_step
+
+
+def make_prefill_step(model, s_max: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, s_max)
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return serve_step
+
+
+def abstract_params(model) -> Any:
+    """ShapeDtypeStructs of the parameter tree (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_opt(params_struct) -> Any:
+    return jax.eval_shape(adam.init, params_struct)

@@ -1,0 +1,11 @@
+"""repro.nn — model substrate: layers, attention, FFN/MoE, SSM, models."""
+from .common import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, HybridConfig, EncDecConfig,
+    SparsityConfig, ShapeConfig, SHAPES, mesh_context, shard, current_mesh,
+)
+from .layers import Linear, RMSNorm, Embedding, apply_rope  # noqa: F401
+from .attention import Attention, chunked_attention, decode_attention  # noqa: F401
+from .ffn import FFN, MoE  # noqa: F401
+from .ssm import Mamba2Block, ssd_chunked, ssd_decode_step  # noqa: F401
+from .transformer import TransformerBlock, MambaLayer, SharedAttnBlock  # noqa: F401
+from .model import LM, EncDec, Stack, build_model  # noqa: F401

@@ -1,0 +1,273 @@
+"""FFN and Mixture-of-Experts blocks.
+
+The FFN junctions (up/gate/down) are where the paper's pre-defined sparsity
+attaches in every assigned architecture: they hold the dominant share of
+parameters (DESIGN.md §4), mirroring the paper's observation that the big
+early junctions tolerate the most sparsity. Per-junction densities follow
+the paper's trend 3 (later junctions denser): ``rho_ffn = (rho_up, rho_down)``.
+
+MoE has two interchangeable implementations:
+
+* ``gshard``   — one-hot dispatch/combine einsums. Pure GSPMD data flow; the
+                 partitioner shards E over 'model'. Simple and robust, but
+                 the dispatch einsum costs O(T*E*C*d) — often more FLOPs than
+                 the experts themselves (this shows up in the §Roofline
+                 useful-flops ratio and is a hillclimb target).
+* ``shardmap`` — explicit expert parallelism: local top-k routing, capacity-
+                 bucketed dispatch buffers, ``lax.all_to_all`` over the
+                 'model' axis to the expert owners, batched expert FFN,
+                 reverse all-to-all, local combine. This is the production
+                 path (the all-to-all is visible in the compiled HLO and in
+                 the collective roofline term).
+
+Both are differentiable and agree numerically (tests/test_moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, MoEConfig, current_mesh, shard
+from .layers import Linear, activation
+
+
+class FFN:
+    """(Gated) feed-forward junction pair, optionally pre-defined sparse."""
+
+    def __init__(self, cfg: ModelConfig, d_ff: Optional[int] = None,
+                 seed: int = 0, d_in: Optional[int] = None):
+        self.cfg = cfg
+        d_ff = d_ff or cfg.d_ff
+        d_in = d_in or cfg.d_model
+        sp = cfg.sparsity
+        rho_up, rho_down = sp.rho_ffn if sp.enabled else (1.0, 1.0)
+        pd = cfg.param_dtype
+        self.up = Linear(d_in, d_ff, rho=rho_up, sp=sp, seed=seed + 11,
+                         dtype=pd, logical_axes=("embed", "mlp"))
+        self.gate = Linear(d_in, d_ff, rho=rho_up, sp=sp, seed=seed + 12,
+                           dtype=pd, logical_axes=("embed", "mlp")) \
+            if cfg.ffn_gated else None
+        self.down = Linear(d_ff, cfg.d_model, rho=rho_down, sp=sp,
+                           seed=seed + 13, dtype=pd,
+                           logical_axes=("mlp", "embed"))
+        self.act = activation(cfg.act)
+
+    def init(self, key: jax.Array) -> dict:
+        ks = jax.random.split(key, 3)
+        p = {"up": self.up.init(ks[0]), "down": self.down.init(ks[1])}
+        if self.gate is not None:
+            p["gate"] = self.gate.init(ks[2])
+        return p
+
+    def spec(self) -> dict:
+        s = {"up": self.up.spec(), "down": self.down.spec()}
+        if self.gate is not None:
+            s["gate"] = self.gate.spec()
+        return s
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        h = self.up(params["up"], x)
+        if self.gate is not None:
+            h = self.act(self.gate(params["gate"], x)) * h
+        else:
+            h = self.act(h)
+        h = shard(h, "batch", "seq", "mlp_act")
+        return self.down(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+class MoE:
+    """Routed experts (+ optional always-on shared experts)."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 impl: str = "shardmap"):
+        assert cfg.moe is not None
+        self.cfg = cfg
+        self.mc = cfg.moe
+        self.impl = impl
+        self.d = cfg.d_model
+        self.d_e = self.mc.d_expert
+        self.act = activation(cfg.act)
+        pd = cfg.param_dtype
+        self.pd = jnp.dtype(pd)
+        self.seed = seed
+        if self.mc.n_shared:
+            self.shared = FFN(cfg, d_ff=self.mc.n_shared * self.d_e,
+                              seed=seed + 29)
+        else:
+            self.shared = None
+
+    # expert weights are stored stacked: (E, d, d_e) / (E, d_e, d)
+    def init(self, key: jax.Array) -> dict:
+        mc, d, d_e = self.mc, self.d, self.d_e
+        ks = jax.random.split(key, 5)
+        E = mc.n_routed
+        p = {
+            "router": jax.random.normal(ks[0], (d, E), self.pd)
+            * np.sqrt(1.0 / d),
+            "up": jax.random.normal(ks[1], (E, d, d_e), self.pd)
+            * np.sqrt(1.0 / d),
+            "gate": jax.random.normal(ks[2], (E, d, d_e), self.pd)
+            * np.sqrt(1.0 / d),
+            "down": jax.random.normal(ks[3], (E, d_e, d), self.pd)
+            * np.sqrt(1.0 / d_e),
+        }
+        if self.shared is not None:
+            p["shared"] = self.shared.init(ks[4])
+        return p
+
+    def spec(self) -> dict:
+        s = {"router": (None, None),
+             "up": ("expert", "embed", None),
+             "gate": ("expert", "embed", None),
+             "down": ("expert", None, "embed")}
+        if self.shared is not None:
+            s["shared"] = self.shared.spec()
+        return s
+
+    def capacity(self, t_local: int) -> int:
+        mc = self.mc
+        c = int(np.ceil(t_local * mc.top_k / mc.n_routed
+                        * mc.capacity_factor))
+        return max(c, 1)
+
+    # -- routing (shared by both impls) -------------------------------------
+
+    def _route(self, params, x2d):
+        """x2d: (T, d) -> gates (T,k), ids (T,k), aux losses."""
+        mc = self.mc
+        logits = (x2d.astype(jnp.float32)
+                  @ params["router"].astype(jnp.float32))  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, ids = jax.lax.top_k(probs, mc.top_k)
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+        # Switch-style load balance + router z-loss
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(
+            jax.nn.one_hot(ids[:, 0], mc.n_routed, dtype=jnp.float32), axis=0)
+        lb_loss = mc.n_routed * jnp.sum(me * ce)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        aux = {"moe_lb": lb_loss, "moe_z": mc.router_zloss * z_loss}
+        return gates, ids, aux
+
+    def _expert_ffn(self, up, gate, down, xe):
+        """xe: (E_loc, C, d) -> (E_loc, C, d), batched over experts."""
+        cdt = xe.dtype
+        h = jnp.einsum("ecd,edf->ecf", xe, up.astype(cdt))
+        g = jnp.einsum("ecd,edf->ecf", xe, gate.astype(cdt))
+        h = self.act(g) * h
+        return jnp.einsum("ecf,efd->ecd", h, down.astype(cdt))
+
+    # -- local (single-shard) sort-based dispatch ----------------------------
+
+    def _dispatch_local(self, x2d, gates, ids, capacity):
+        """Build (E, C) token-index and gate buffers from local routing."""
+        mc = self.mc
+        T = x2d.shape[0]
+        k, E, C = mc.top_k, mc.n_routed, capacity
+        flat_ids = ids.reshape(-1)
+        order = jnp.argsort(flat_ids, stable=True)
+        sid = flat_ids[order]
+        stok = order // k
+        sgate = gates.reshape(-1)[order]
+        counts = jnp.bincount(flat_ids, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(T * k) - starts[sid]
+        posc = jnp.minimum(pos, C)  # overflow -> spill column C
+        buf_tok = jnp.full((E, C + 1), T, jnp.int32).at[sid, posc].set(
+            stok.astype(jnp.int32))
+        buf_gate = jnp.zeros((E, C + 1), jnp.float32).at[sid, posc].set(sgate)
+        return buf_tok[:, :C], buf_gate[:, :C]
+
+    def _moe_local(self, params, x2d, capacity):
+        gates, ids, aux = self._route(params, x2d)
+        buf_tok, buf_gate = self._dispatch_local(x2d, gates, ids, capacity)
+        T, d = x2d.shape
+        xp = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+        xe = xp[buf_tok]  # (E, C, d)
+        ye = self._expert_ffn(params["up"], params["gate"], params["down"],
+                              xe)
+        yw = ye * buf_gate[..., None].astype(ye.dtype)
+        y = jnp.zeros((T + 1, d), ye.dtype).at[buf_tok.reshape(-1)].add(
+            yw.reshape(-1, d))
+        return y[:T], aux
+
+    # -- expert-parallel shard_map implementation ----------------------------
+
+    def _moe_shardmap(self, params, x2d_shape_hint, x, mesh, ep_axis):
+        """x: (B, S, d). Experts sharded over ``ep_axis``; tokens keep their
+        (batch, seq) sharding. all_to_all moves capacity buffers to expert
+        owners and back within each data row."""
+        from jax.sharding import PartitionSpec as P
+        from .common import logical_to_spec
+
+        mc = self.mc
+        n_ep = mesh.shape[ep_axis]
+        E, k = mc.n_routed, mc.top_k
+        e_loc = E // n_ep
+        x_spec = logical_to_spec("batch", "seq", None)
+        w_spec = P(ep_axis, None, None)
+        r_spec = P(None, None)
+        all_axes = tuple(mesh.axis_names)
+
+        def local_fn(router, up, gate, down, xl):
+            b, s, d = xl.shape
+            t_loc = b * s
+            x2d = xl.reshape(t_loc, d)
+            gates, ids, aux = self._route({"router": router}, x2d)
+            c_src = self.capacity(t_loc)
+            buf_tok, buf_gate = self._dispatch_local(x2d, gates, ids, c_src)
+            xp = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+            xe = xp[buf_tok]  # (E, C_src, d)
+            # ship capacity buffers to expert owners: E = n_ep * e_loc
+            xr = jax.lax.all_to_all(
+                xe.reshape(n_ep, e_loc, c_src, d), ep_axis, 0, 0,
+                tiled=False)  # (n_ep, e_loc, C_src, d): sources stacked
+            xr = jnp.moveaxis(xr, 0, 1).reshape(e_loc, n_ep * c_src, d)
+            ye = self._expert_ffn(up, gate, down, xr)
+            ye = jnp.moveaxis(ye.reshape(e_loc, n_ep, c_src, d), 1, 0)
+            yb = jax.lax.all_to_all(ye, ep_axis, 0, 0, tiled=False)
+            yb = yb.reshape(E, c_src, d)  # back at the source, per expert
+            yw = yb * buf_gate[..., None].astype(yb.dtype)
+            y = jnp.zeros((t_loc + 1, d), yb.dtype).at[
+                buf_tok.reshape(-1)].add(yw.reshape(-1, d))
+            aux = {n: jax.lax.pmean(v, all_axes) for n, v in aux.items()}
+            return y[:t_loc].reshape(b, s, d), aux
+
+        fn = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(r_spec, w_spec, w_spec, w_spec, x_spec),
+            out_specs=(x_spec, {n: P() for n in ("moe_lb", "moe_z")}),
+            check_vma=False)
+        return fn(params["router"], params["up"], params["gate"],
+                  params["down"], x)
+
+    # -- public --------------------------------------------------------------
+
+    def __call__(self, params: dict, x: jax.Array) -> Tuple[jax.Array, dict]:
+        """x: (B, S, d) -> (y, aux_losses)."""
+        cfg, mc = self.cfg, self.mc
+        b, s, d = x.shape
+        mesh = current_mesh()
+        use_sm = (self.impl == "shardmap" and mesh is not None
+                  and "model" in mesh.axis_names
+                  and mc.n_routed % mesh.shape["model"] == 0)
+        if use_sm:
+            y, aux = self._moe_shardmap(params, None, x, mesh, "model")
+        else:
+            x2d = x.reshape(b * s, d)
+            y2d, aux = self._moe_local(params, x2d,
+                                       self.capacity(b * s))
+            y = y2d.reshape(b, s, d)
+        if self.shared is not None:
+            y = y + self.shared(params["shared"], x)
+        return y.astype(x.dtype), aux

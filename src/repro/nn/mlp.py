@@ -1,0 +1,167 @@
+"""The paper's own model: a pre-defined sparse MLP (eqs. (2)-(4)).
+
+Faithful reproduction settings (paper §IV-A): ReLU hidden activations,
+softmax output, He weight init, bias init 0.1 (0.0 for Reuters-style runs),
+Adam, L2 penalty on weights scaled down with sparsity. Per-junction pattern
+method/density/z are configurable — exactly the knobs of Tables I/II and
+Figs. 6-12.
+
+``mode='mask'`` trains a dense weight under a fixed 0/1 mask: bit-identical
+learning dynamics to per-edge processing (the gradient of a masked weight is
+the masked gradient), at dense-matmul speed — this is what the benchmark
+harness uses. ``mode='gather'`` stores only |W_i| weights (the storage the
+hardware sees, Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import sparsity
+from ..core.sparse_linear import SparseLinear, SparseLinearSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    n_net: Tuple[int, ...] = (800, 100, 10)
+    # per-junction densities; None = fully connected
+    rho: Optional[Tuple[float, ...]] = None
+    method: str = "clashfree"          # clashfree | structured | random
+    cf_type: int = 1
+    dither: bool = False
+    z: Optional[Tuple[int, ...]] = None  # degree-of-parallelism per junction
+    mode: str = "mask"                 # mask | gather
+    bias_init: float = 0.1
+    seed: int = 0
+
+    @property
+    def n_junctions(self) -> int:
+        return len(self.n_net) - 1
+
+    def junction_rho(self, i: int) -> float:
+        if self.rho is None:
+            return 1.0
+        return self.rho[i]
+
+
+class SparseMLP:
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+        self.layers = []
+        for i in range(cfg.n_junctions):
+            rho = cfg.junction_rho(i)
+            mode = cfg.mode if rho < 1.0 else "dense"
+            if cfg.method == "random" and rho < 1.0:
+                mode = "mask"  # random patterns have no fixed degrees
+            spec = SparseLinearSpec(
+                n_in=cfg.n_net[i], n_out=cfg.n_net[i + 1], rho=rho,
+                mode=mode, method=cfg.method, cf_type=cfg.cf_type,
+                dither=cfg.dither, seed=cfg.seed * 1000 + i,
+                use_bias=True)
+            self.layers.append(SparseLinear(spec))
+
+    # -- parameters -----------------------------------------------------------
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.layers))
+        params = {}
+        for i, (layer, k) in enumerate(zip(self.layers, keys)):
+            p = layer.init(k)
+            p["b"] = jnp.full_like(p["b"], cfg.bias_init)
+            params[f"j{i}"] = p
+        return params
+
+    def n_weights(self) -> int:
+        """|W| summed over junctions (paper's complexity measure)."""
+        return sum(l.pattern.n_edges if l.pattern is not None
+                   else l.spec.n_in * l.spec.n_out for l in self.layers)
+
+    def density(self) -> float:
+        num = self.n_weights()
+        den = sum(l.spec.n_in * l.spec.n_out for l in self.layers)
+        return num / den
+
+    # -- forward / loss ---------------------------------------------------------
+
+    def logits(self, params: dict, x: jax.Array) -> jax.Array:
+        h = x
+        for i, layer in enumerate(self.layers):
+            h = layer(params[f"j{i}"], h)
+            if i < len(self.layers) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss(self, params: dict, x: jax.Array, y: jax.Array,
+             l2: float = 0.0) -> jax.Array:
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+        if l2 > 0.0:
+            wsum = sum(jnp.sum(params[f"j{i}"]["w"] ** 2)
+                       for i in range(len(self.layers)))
+            nll = nll + l2 * wsum
+        return nll
+
+    def accuracy(self, params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+        return jnp.mean((jnp.argmax(self.logits(params, x), -1) == y)
+                        .astype(jnp.float32))
+
+
+def train_mlp(
+    model: SparseMLP,
+    data: Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray],
+    *,
+    epochs: int = 20,
+    batch: int = 256,
+    lr: float = 1e-3,
+    l2: float = 1e-4,
+    seed: int = 0,
+    lr_decay: float = 1e-5,
+) -> Tuple[dict, float]:
+    """Minimal Adam training loop for the repro benchmarks.
+
+    Returns (params, test_accuracy). L2 is scaled by density (the paper
+    reduces the penalty for sparser nets, §IV-A).
+    """
+    x_tr, y_tr, x_te, y_te = data
+    params = model.init(jax.random.key(seed))
+    l2_eff = l2 * model.density()
+
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, x, y, t):
+        g = jax.grad(lambda p: model.loss(p, x, y, l2_eff))(params)
+        lr_t = lr / (1.0 + lr_decay * t)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        tt = t + 1.0
+        def upd(p, mm, vv):
+            mh = mm / (1 - b1 ** tt)
+            vh = vv / (1 - b2 ** tt)
+            return p - lr_t * mh / (jnp.sqrt(vh) + eps)
+        params = jax.tree.map(upd, params, m, v)
+        return params, m, v
+
+    n = x_tr.shape[0]
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - batch + 1, batch):
+            idx = order[s:s + batch]
+            params, opt_m, opt_v = step(params, opt_m, opt_v,
+                                        jnp.asarray(x_tr[idx]),
+                                        jnp.asarray(y_tr[idx]), t)
+            t += 1.0
+    acc = float(model.accuracy(params, jnp.asarray(x_te),
+                               jnp.asarray(y_te)))
+    return params, acc

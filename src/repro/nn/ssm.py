@@ -1,0 +1,300 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked scan + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 in pure JAX: the sequence
+is split into chunks; within a chunk the quadratic (attention-like) form is
+used, across chunks a recurrent state (B, H, P, N) is carried by
+``lax.scan``. This keeps compute O(S * chunk) and state O(1), which is what
+makes the ``long_500k`` cell runnable for mamba2/zamba2 while the pure
+attention architectures are skipped (DESIGN.md §4).
+
+Decode is a single recurrence step against a persistent state cache — the
+SSM analogue of a KV cache, with constant memory in sequence length.
+
+Note (§Arch-applicability): the paper's pre-defined sparsity applies to the
+in/out *projection junctions* here; the SSD recurrence itself has no weight
+junction to sparsify.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, SSMConfig, shard
+from .layers import Linear, RMSNorm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum' for decay matrices: out[i, j] = sum_{j<k<=i} a_k
+    (lower-triangular), -inf above the diagonal. a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) — post-softplus
+    a: jax.Array,    # (H,) — negative decay rates
+    b_in: jax.Array,  # (B, S, G, N)
+    c_in: jax.Array,  # (B, S, G, N)
+    d_skip: jax.Array,  # (H,)
+    *,
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B, S, H, P), final_state: (B, H, P, N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[-2:]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 at padded steps makes them identity in the recurrence
+        # (decay exp(0)=1, update dt*B*x = 0), so the final state is exact.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // chunk
+    reps = h // g
+
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    af = a.astype(f32)
+
+    # chunked views; heads kept GROUPED (B, nc, Q, G, hg, ...) so B/C are
+    # never expanded to per-head copies, and every einsum below is strictly
+    # two-operand with an explicit contraction — a 3/4-operand einsum here
+    # lets opt_einsum materialize a (.., Q, H, P, N) outer product (tens of
+    # GB per layer at train_4k scale).
+    hg = reps
+
+    def ck(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc = ck(xf).reshape(bsz, nc, chunk, g, hg, p)      # (B,nc,Q,G,hg,P)
+    dtc = ck(dtf)                                      # (B,nc,Q,H)
+    dtg = dtc.reshape(bsz, nc, chunk, g, hg)
+    bc = ck(b_in.astype(f32))                          # (B,nc,Q,G,N)
+    cc = ck(c_in.astype(f32))
+    adt = dtc * af[None, None, None, :]                # (B,nc,Q,H)
+    adt_cum = jnp.cumsum(adt, axis=2)                  # within-chunk cumsum
+
+    # intra-chunk (quadratic) term: per-group scores, per-head decay
+    lmat = jnp.exp(_segsum(jnp.moveaxis(adt, -1, 2)))  # (B,nc,H,Q,Q)
+    lmat = lmat.reshape(bsz, nc, g, hg, chunk, chunk)
+    scores = jnp.einsum("bnqgx,bnkgx->bngqk", cc, bc)  # (B,nc,G,Q,Q)
+    # mw[q,k] = scores[q,k] * exp(segsum) * dt[k]  (fused elementwise chain)
+    mw = scores[:, :, :, None] * lmat \
+        * jnp.moveaxis(dtg, 2, 4)[:, :, :, :, None, :]  # (B,nc,G,hg,Q,K)
+    y_intra = jnp.einsum("bnghqk,bnkghp->bnqghp", mw, xc)
+
+    # chunk-final states: sum_k decay_k dt_k x_k B_k^T (contract over k)
+    decay_to_end = jnp.exp(adt_cum[:, :, -1:, :] - adt_cum)  # (B,nc,Q,H)
+    w = (decay_to_end * dtc).reshape(bsz, nc, chunk, g, hg)
+    xw = xc * w[..., None]                             # (B,nc,Q,G,hg,P)
+    states = jnp.einsum("bnqghp,bnqgx->bnghpx", xw, bc)
+    states = states.reshape(bsz, nc, h, p, n)          # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(adt_cum[:, :, -1, :])        # (B,nc,H)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), f32)
+    else:
+        h0 = h0.astype(f32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        new = st + dec[:, :, None, None] * carry
+        return new, carry  # output: state *entering* the chunk
+
+    last, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B, nc, H, P, N)
+
+    # inter-chunk output: C_i · (decay_in[i] * h_prev) — contract over N
+    h_prev_g = h_prev.reshape(bsz, nc, g, hg, p, n)
+    ch = jnp.einsum("bnqgx,bnghpx->bnqghp", cc, h_prev_g)
+    decay_in = jnp.exp(adt_cum).reshape(bsz, nc, chunk, g, hg)
+    y_inter = ch * decay_in[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + xf * d_skip.astype(f32)[None, None, :, None]
+    if pad:
+        y = y[:, :s_orig]
+    return y.astype(x.dtype), last
+
+
+def ssd_decode_step(
+    x: jax.Array,   # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    a: jax.Array,   # (H,)
+    b_in: jax.Array,  # (B, 1, G, N)
+    c_in: jax.Array,  # (B, 1, G, N)
+    d_skip: jax.Array,
+    state: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, _, h, p = x.shape
+    g = b_in.shape[-2]
+    reps = h // g
+    head_group = jnp.arange(h) // reps
+    f32 = jnp.float32
+    bh = jnp.take(b_in.astype(f32), head_group, axis=2)[:, 0]  # (B, H, N)
+    ch = jnp.take(c_in.astype(f32), head_group, axis=2)[:, 0]
+    dtf = dt.astype(f32)[:, 0]          # (B, H)
+    dec = jnp.exp(dtf * a.astype(f32))  # (B, H)
+    xf = x.astype(f32)[:, 0]            # (B, H, P)
+    upd = jnp.einsum("bh,bhp,bhx->bhpx", dtf, xf, bh)
+    new_state = dec[:, :, None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhx,bhpx->bhp", ch, new_state)
+    y = y + xf * d_skip.astype(f32)[None, :, None]
+    return y[:, None].astype(x.dtype), new_state.astype(state.dtype)
+
+
+class Mamba2Block:
+    """Full Mamba2 mixer: in_proj -> causal depthwise conv -> SSD -> gated
+    RMSNorm -> out_proj."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        assert cfg.ssm is not None
+        self.cfg = cfg
+        sc = cfg.ssm
+        self.sc = sc
+        d = cfg.d_model
+        self.d_inner = sc.expand * d
+        self.n_heads = self.d_inner // sc.head_dim
+        self.conv_dim = self.d_inner + 2 * sc.n_groups * sc.d_state
+        proj_out = (2 * self.d_inner + 2 * sc.n_groups * sc.d_state
+                    + self.n_heads)
+        sp = cfg.sparsity
+        rho_up, rho_down = sp.rho_ffn if sp.enabled else (1.0, 1.0)
+        pd = cfg.param_dtype
+        self.in_proj = Linear(d, proj_out, rho=rho_up, sp=sp,
+                              seed=seed + 21, dtype=pd,
+                              logical_axes=("embed", "mlp"))
+        self.out_proj = Linear(self.d_inner, d, rho=rho_down, sp=sp,
+                               seed=seed + 22, dtype=pd,
+                               logical_axes=("mlp", "embed"))
+        self.norm = RMSNorm(self.d_inner, cfg.rms_eps, pd,
+                            zero_centered=False)
+
+    def init(self, key: jax.Array) -> dict:
+        sc = self.sc
+        ks = jax.random.split(key, 5)
+        lo, hi = sc.a_init_range
+        a_init = jnp.exp(jax.random.uniform(
+            ks[2], (self.n_heads,), jnp.float32,
+            np.log(lo), np.log(hi)))
+        dt = jnp.exp(jax.random.uniform(
+            ks[3], (self.n_heads,), jnp.float32,
+            np.log(1e-3), np.log(1e-1)))
+        dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+        return {
+            "in_proj": self.in_proj.init(ks[0]),
+            "out_proj": self.out_proj.init(ks[1]),
+            "conv_w": jax.random.normal(
+                ks[4], (sc.d_conv, self.conv_dim), jnp.float32)
+            * np.sqrt(1.0 / sc.d_conv),
+            "conv_b": jnp.zeros((self.conv_dim,), jnp.float32),
+            "a_log": jnp.log(a_init),
+            "dt_bias": dt_bias,
+            "d_skip": jnp.ones((self.n_heads,), jnp.float32),
+            "norm": self.norm.init(),
+        }
+
+    def spec(self) -> dict:
+        return {
+            "in_proj": self.in_proj.spec(),
+            "out_proj": self.out_proj.spec(),
+            "conv_w": (None, "mlp"),
+            "conv_b": ("mlp",),
+            "a_log": (None,),
+            "dt_bias": (None,),
+            "d_skip": (None,),
+            "norm": self.norm.spec(),
+        }
+
+    def _split(self, proj):
+        sc = self.sc
+        di, gn = self.d_inner, sc.n_groups * sc.d_state
+        z = proj[..., :di]
+        xbc = proj[..., di:di + self.conv_dim]
+        dt = proj[..., di + self.conv_dim:]
+        return z, xbc, dt
+
+    def _conv(self, params, xbc, carry: Optional[jax.Array]):
+        """Causal depthwise conv along seq. carry: (B, d_conv-1, conv_dim)."""
+        kw = params["conv_w"].astype(xbc.dtype)  # (K, C)
+        k = kw.shape[0]
+        if carry is None:
+            pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+        else:
+            pad = carry.astype(xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+        new_carry = xp[:, -(k - 1):, :]
+        out = sum(xp[:, i:i + xbc.shape[1], :] * kw[i] for i in range(k))
+        out = out + params["conv_b"].astype(xbc.dtype)
+        return jax.nn.silu(out), new_carry
+
+    def _pre_ssd(self, params, x, conv_carry):
+        sc = self.sc
+        proj = self.in_proj(params["in_proj"], x)
+        z, xbc, dt = self._split(proj)
+        xbc, new_carry = self._conv(params, xbc, conv_carry)
+        di, gn = self.d_inner, sc.n_groups * sc.d_state
+        xs = xbc[..., :di]
+        b_in = xbc[..., di:di + gn].reshape(*xbc.shape[:2], sc.n_groups,
+                                            sc.d_state)
+        c_in = xbc[..., di + gn:].reshape(*xbc.shape[:2], sc.n_groups,
+                                          sc.d_state)
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+        dt = jnp.clip(dt, *sc.dt_limit)
+        xh = xs.reshape(*xs.shape[:2], self.n_heads, sc.head_dim)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        return z, xh, dt, a, b_in, c_in, new_carry
+
+    def __call__(self, params: dict, x: jax.Array,
+                 state: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+        """Full-sequence form. state (optional) = {'ssd','conv'} carried in
+        (for chunk-streamed prefill); returns output + final state."""
+        cfg, sc = self.cfg, self.sc
+        conv_carry = state["conv"] if state else None
+        h0 = state["ssd"] if state else None
+        z, xh, dt, a, b_in, c_in, conv_out = self._pre_ssd(
+            params, x, conv_carry)
+        y, h_last = ssd_chunked(xh, dt, a, b_in, c_in, params["d_skip"],
+                                chunk=sc.chunk, h0=h0)
+        y = y.reshape(*x.shape[:2], self.d_inner)
+        y = self.norm(params["norm"], y * jax.nn.silu(z.astype(y.dtype)))
+        out = self.out_proj(params["out_proj"], y)
+        new_state = {"ssd": h_last, "conv": conv_out}
+        return out, new_state
+
+    def decode(self, params: dict, x: jax.Array,
+               state: dict) -> Tuple[jax.Array, dict]:
+        """One-token step. state = {'ssd': (B,H,P,N), 'conv': (B,K-1,C)}."""
+        z, xh, dt, a, b_in, c_in, conv_out = self._pre_ssd(
+            params, x, state["conv"])
+        y, new_ssd = ssd_decode_step(xh, dt, a, b_in, c_in,
+                                     params["d_skip"], state["ssd"])
+        y = y.reshape(*x.shape[:2], self.d_inner)
+        y = self.norm(params["norm"], y * jax.nn.silu(z.astype(y.dtype)))
+        out = self.out_proj(params["out_proj"], y)
+        return out, {"ssd": new_ssd, "conv": conv_out}
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> dict:
+        sc = self.sc
+        return {
+            "ssd": jnp.zeros((batch, self.n_heads, sc.head_dim, sc.d_state),
+                             dtype),
+            "conv": jnp.zeros((batch, sc.d_conv - 1, self.conv_dim), dtype),
+        }

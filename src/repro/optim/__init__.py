@@ -1,0 +1,7 @@
+"""repro.optim — AdamW, LR schedules, gradient compression."""
+from . import adam  # noqa: F401
+from .adam import AdamWConfig, lr_at, global_norm  # noqa: F401
+from .compression import (  # noqa: F401
+    quantize_int8, dequantize_int8, compress_with_feedback,
+    psum_compressed_tree, compression_ratio,
+)

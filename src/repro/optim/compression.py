@@ -1,0 +1,75 @@
+"""Gradient/delta compression: int8 quantization with error feedback.
+
+Used by the DiLoCo-style cross-pod sync (``train.trainer``): pods run K
+local steps, then exchange *compressed* parameter deltas over DCN. Error
+feedback (Seide et al. / EF-SGD) accumulates the quantization residual so
+the compression is unbiased over time — the standard trick that makes 8-bit
+(and lower) gradient exchange converge.
+
+``psum_compressed`` performs the cross-pod mean in int8 inside a shard_map
+over the pod axis; with no pod axis it reduces locally (identity mean).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(x: jax.Array, err: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (x + err); new error = input - dequantized."""
+    target = x.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    return q, scale, target - deq
+
+
+def psum_compressed_tree(tree, err_tree, axis_name: Optional[str]):
+    """Compressed mean over ``axis_name`` with error feedback, leafwise.
+
+    Must be called inside a shard_map/psum context when axis_name is not
+    None. Returns (mean_tree_f32, new_err_tree).
+    """
+    def leaf(x, err):
+        q, scale, new_err = compress_with_feedback(x, err)
+        if axis_name is None:
+            return dequantize_int8(q, scale), new_err
+        # exchange int8 payload; scales are f32 scalars (negligible bytes)
+        s = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
+        scale_sum = jax.lax.psum(scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        # each pod contributed q_i * scale_i; with per-tensor scales close
+        # across pods we use the mean scale (exact when scales equal):
+        mean = s.astype(jnp.float32) * (scale_sum / n) / n
+        return mean, new_err
+
+    leaves, tdef = jax.tree.flatten(tree)
+    errs = jax.tree.leaves(err_tree)
+    out, new_errs = [], []
+    for x, e in zip(leaves, errs):
+        m, ne = leaf(x, e)
+        out.append(m)
+        new_errs.append(ne)
+    return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, new_errs)
+
+
+def compression_ratio(tree) -> float:
+    """Bytes(int8+scale) / bytes(f32) for reporting."""
+    total = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    comp = sum(x.size + 4 for x in jax.tree.leaves(tree))
+    return comp / max(total, 1)

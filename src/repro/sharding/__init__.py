@@ -1,0 +1,5 @@
+"""repro.sharding — logical-axis sharding policies for train/serve."""
+from .policy import (  # noqa: F401
+    TRAIN_RULES, SERVE_RULES, LONG_RULES, rules_for,
+    param_pspecs, opt_pspecs, cache_pspecs, batch_pspecs, named,
+)

@@ -1,0 +1,129 @@
+"""Launcher-level fault tolerance: heartbeats, stragglers, elastic re-mesh.
+
+JAX SPMD programs are lockstep — a dead or slow host cannot be handled
+*inside* a step. Production systems therefore handle failures at the
+launcher layer; this module implements that layer's logic so it is testable
+without a cluster:
+
+* ``HeartbeatMonitor``  — per-host last-seen timestamps; hosts exceeding the
+  timeout are declared dead, hosts whose step lag exceeds the straggler
+  threshold are flagged (so the launcher can pre-emptively checkpoint and
+  exclude them at the next restart boundary).
+* ``remesh_plan``       — given surviving host count, picks the largest
+  power-of-two data-parallel degree that the survivors support, keeping the
+  model axis intact (TP/EP degree is a property of the checkpointed layout;
+  changing it requires resharding, which ``restore`` supports since target
+  shardings are an input). Returns the new mesh shape + the batch scaling.
+* ``RestartLoop``       — drives try/except around the step function:
+  checkpoint-restore, failure counting, backoff. Used by ``launch.train``
+  and exercised by tests with injected failures.
+
+At 1000+ nodes the same logic runs in the cluster scheduler; the decisions
+(when to declare death, how to shrink the mesh, what to do with stragglers)
+are exactly what these functions encode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    last_seen: float
+    step: int = 0
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0,
+                 straggler_steps: int = 3):
+        self.timeout = timeout_s
+        self.straggler_steps = straggler_steps
+        now = time.monotonic()
+        self.hosts: Dict[str, HostState] = {
+            h: HostState(last_seen=now) for h in hosts}
+
+    def beat(self, host: str, step: int, now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        st = self.hosts[host]
+        st.last_seen = now
+        st.step = step
+
+    def dead(self, now: Optional[float] = None) -> List[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, st in self.hosts.items()
+                if now - st.last_seen > self.timeout]
+
+    def stragglers(self) -> List[str]:
+        if not self.hosts:
+            return []
+        lead = max(st.step for st in self.hosts.values())
+        return [h for h, st in self.hosts.items()
+                if lead - st.step >= self.straggler_steps]
+
+    def healthy(self, now: Optional[float] = None) -> List[str]:
+        d = set(self.dead(now))
+        return [h for h in self.hosts if h not in d]
+
+
+def remesh_plan(n_alive_hosts: int, devices_per_host: int,
+                model_axis: int, pod_axis: int = 1
+                ) -> Optional[dict]:
+    """Largest runnable mesh on the survivors.
+
+    The model axis is preserved (parameter layout); the data axis shrinks to
+    the largest power of two that fits. Returns None if even model_axis
+    devices are not available. global_batch should be scaled by
+    ``plan['data'] / old_data`` or grad-accum increased to compensate.
+    """
+    total = n_alive_hosts * devices_per_host
+    per_replica = model_axis * pod_axis
+    if total < per_replica:
+        return None
+    data = 1
+    while data * 2 * per_replica <= total:
+        data *= 2
+    return {"pod": pod_axis, "data": data, "model": model_axis,
+            "devices_used": data * per_replica,
+            "devices_idle": total - data * per_replica}
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_failures: int = 10
+    backoff_s: float = 0.0  # kept 0 in tests
+    checkpoint_every: int = 50
+
+
+class RestartLoop:
+    """Checkpoint-restart driver with failure injection hooks (tests)."""
+
+    def __init__(self, policy: RestartPolicy, save_fn: Callable[[int], None],
+                 restore_fn: Callable[[], int]):
+        self.policy = policy
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.failures = 0
+        self.restarts = 0
+
+    def run(self, step_fn: Callable[[int], None], total_steps: int) -> int:
+        """Runs step_fn(step) for steps [resume..total); returns steps run."""
+        executed = 0
+        while True:
+            start = self.restore_fn()
+            try:
+                for step in range(start, total_steps):
+                    step_fn(step)
+                    executed += 1
+                    if (step + 1) % self.policy.checkpoint_every == 0:
+                        self.save_fn(step + 1)
+                self.save_fn(total_steps)
+                return executed
+            except RuntimeError:
+                self.failures += 1
+                self.restarts += 1
+                if self.failures > self.policy.max_failures:
+                    raise
+                if self.policy.backoff_s:
+                    time.sleep(self.policy.backoff_s)

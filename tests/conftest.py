@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Smoke tests and benches must see the real single CPU device — do NOT set
+# xla_force_host_platform_device_count here (dry-run tests that need fake
+# devices spawn subprocesses instead).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

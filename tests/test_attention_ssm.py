@@ -1,0 +1,120 @@
+"""Unit tests: chunked attention vs reference; SSD chunked vs sequential."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import mha_ref
+from repro.nn.attention import chunked_attention, decode_attention
+from repro.nn.ssm import ssd_chunked, ssd_decode_step
+
+
+def _grouped(q, hkv):
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, dh)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunked_attention_matches_ref(window, chunk):
+    b, s, hq, hkv, dh = 2, 32, 4, 2, 8
+    q = jax.random.normal(jax.random.key(0), (b, s, hq, dh))
+    k = jax.random.normal(jax.random.key(1), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.key(2), (b, s, hkv, dh))
+    o_ref = mha_ref(q, k, v, causal=True, window=window)
+    o = chunked_attention(_grouped(q, hkv), k, v, causal=True,
+                          window=window, softcap=None, chunk=chunk,
+                          scale=dh ** -0.5)
+    np.testing.assert_allclose(o.reshape(o_ref.shape), o_ref, atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_chunked_attention_odd_seq():
+    b, s, hq, hkv, dh = 1, 19, 2, 1, 4
+    q = jax.random.normal(jax.random.key(0), (b, s, hq, dh))
+    k = jax.random.normal(jax.random.key(1), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.key(2), (b, s, hkv, dh))
+    o_ref = mha_ref(q, k, v, causal=True)
+    o = chunked_attention(_grouped(q, hkv), k, v, causal=True, window=None,
+                          softcap=None, chunk=8, scale=dh ** -0.5)
+    np.testing.assert_allclose(o.reshape(o_ref.shape), o_ref, atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_decode_attention_matches_ref():
+    b, s, hq, hkv, dh = 2, 16, 4, 2, 8
+    q = jax.random.normal(jax.random.key(0), (b, 1, hq, dh))
+    k = jax.random.normal(jax.random.key(1), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.key(2), (b, s, hkv, dh))
+    for pos, window in [(7, None), (15, None), (12, 4)]:
+        o_ref = mha_ref(q, k[:, :pos + 1], v[:, :pos + 1], causal=True,
+                        window=window, q_offset=pos)
+        o = decode_attention(_grouped(q, hkv), k, v, pos=jnp.asarray(pos),
+                             window=window, softcap=None, scale=dh ** -0.5)
+        np.testing.assert_allclose(o.reshape(o_ref.shape), o_ref,
+                                   atol=2e-5, rtol=2e-5)
+
+
+# -- SSD ---------------------------------------------------------------------
+
+
+@given(st.integers(1, 3), st.sampled_from([8, 12, 16]),
+       st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_ssd_chunked_equals_sequential(b, s, h, g, seed):
+    p, n = 4, 6
+    ks = jax.random.split(jax.random.key(seed), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b_in = jax.random.normal(ks[3], (b, s, g, n))
+    c_in = jax.random.normal(ks[4], (b, s, g, n))
+    d_skip = jax.random.normal(ks[5], (h,))
+    y, hf = ssd_chunked(x, dt, a, b_in, c_in, d_skip, chunk=4)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, state = ssd_decode_step(x[:, t:t + 1], dt[:, t:t + 1], a,
+                                    b_in[:, t:t + 1], c_in[:, t:t + 1],
+                                    d_skip, state)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y, y_seq, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(hf, state, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_streaming_state_carry():
+    b, s, h, p, g, n = 2, 16, 4, 8, 1, 6
+    ks = jax.random.split(jax.random.key(1), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b_in = jax.random.normal(ks[3], (b, s, g, n))
+    c_in = jax.random.normal(ks[4], (b, s, g, n))
+    d = jax.random.normal(ks[5], (h,))
+    y_full, h_full = ssd_chunked(x, dt, a, b_in, c_in, d, chunk=4)
+    y1, h1 = ssd_chunked(x[:, :8], dt[:, :8], a, b_in[:, :8], c_in[:, :8],
+                         d, chunk=4)
+    y2, h2 = ssd_chunked(x[:, 8:], dt[:, 8:], a, b_in[:, 8:], c_in[:, 8:],
+                         d, chunk=4, h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-5)
+    np.testing.assert_allclose(h2, h_full, atol=1e-5)
+
+
+def test_ssd_pad_is_identity_on_state():
+    """Non-multiple seq: padded steps must not perturb the final state."""
+    b, s, h, p, g, n = 1, 13, 2, 4, 1, 4
+    ks = jax.random.split(jax.random.key(3), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    b_in = jax.random.normal(ks[3], (b, s, g, n))
+    c_in = jax.random.normal(ks[4], (b, s, g, n))
+    d = jax.random.normal(ks[5], (h,))
+    y8, h8 = ssd_chunked(x, dt, a, b_in, c_in, d, chunk=8)   # pads to 16
+    y13, h13 = ssd_chunked(x, dt, a, b_in, c_in, d, chunk=13)  # exact
+    np.testing.assert_allclose(y8, y13, atol=1e-5)
+    np.testing.assert_allclose(h8, h13, atol=1e-5)

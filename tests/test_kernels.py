@@ -1,0 +1,141 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_weights_to_dense, make_block_pattern
+from repro.kernels import csd_spmm, ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# -- CSD-SpMM: shape x dtype x density sweep ---------------------------------
+
+SPMM_CASES = [
+    # (n_in, n_out, bl, br, rho, m, block_m)
+    (64, 64, 8, 8, 0.5, 16, 8),
+    (128, 64, 16, 16, 0.25, 32, 16),
+    (64, 128, 8, 16, 0.75, 24, 8),
+    (96, 48, 8, 8, 1.0 / 3.0, 8, 8),
+    (256, 256, 32, 32, 0.125, 64, 32),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SPMM_CASES)
+def test_csd_spmm_fwd(case, dtype):
+    n_in, n_out, bl, br, rho, m, bm = case
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=1)
+    x = jax.random.normal(jax.random.key(0), (m, n_in), dtype)
+    w = jax.random.normal(jax.random.key(1),
+                          (bp.n_rb, bp.d_in_b, bl, br), dtype)
+    y_ref = ref.csd_spmm_fwd_ref(x, w, bp.block_idx)
+    y = csd_spmm.csd_spmm_fwd(x, w, bp.block_idx, block_m=bm,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", SPMM_CASES[:3])
+def test_csd_spmm_dx_dw(case):
+    n_in, n_out, bl, br, rho, m, bm = case
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=2)
+    dy = jax.random.normal(jax.random.key(2), (m, n_out))
+    x = jax.random.normal(jax.random.key(3), (m, n_in))
+    w = jax.random.normal(jax.random.key(4),
+                          (bp.n_rb, bp.d_in_b, bl, br))
+    dx = csd_spmm.csd_spmm_dx(dy, w, bp.out_idx, bp.out_slot, block_m=bm,
+                              interpret=True)
+    dx_ref = ref.csd_spmm_dx_ref(dy, w, bp.out_idx, bp.out_slot)
+    np.testing.assert_allclose(dx, dx_ref, atol=2e-5, rtol=2e-5)
+    dw = csd_spmm.csd_spmm_dw(x, dy, bp.block_idx, block_in=bl,
+                              block_out=br, block_m=bm, interpret=True)
+    dw_ref = ref.csd_spmm_dw_ref(x, dy, bp.block_idx, bl, br)
+    np.testing.assert_allclose(dw, dw_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_csd_matmul_grad_matches_dense_oracle():
+    bp = make_block_pattern(64, 48, 0.5, block_in=8, block_out=8, seed=0)
+    x = jax.random.normal(jax.random.key(0), (16, 64))
+    w = jax.random.normal(jax.random.key(1), (bp.n_rb, bp.d_in_b, 8, 8))
+
+    def loss_sparse(w):
+        y = ops.csd_matmul(x, w, bp, backend="pallas", block_m=8,
+                           interpret=True)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_dense(w):
+        return jnp.sum(jnp.sin(x @ block_weights_to_dense(w, bp)))
+
+    np.testing.assert_allclose(loss_sparse(w), loss_dense(w), rtol=1e-5)
+    g1 = jax.grad(loss_sparse)(w)
+    g2 = jax.grad(loss_dense)(w)
+    np.testing.assert_allclose(g1, g2, atol=1e-4, rtol=1e-4)
+
+
+def test_csd_matmul_xla_equals_pallas():
+    bp = make_block_pattern(64, 64, 0.25, block_in=16, block_out=16, seed=3)
+    x = jax.random.normal(jax.random.key(5), (4, 7, 64))  # odd M: padding
+    w = jax.random.normal(jax.random.key(6), (bp.n_rb, bp.d_in_b, 16, 16))
+    y1 = ops.csd_matmul(x, w, bp, backend="xla")
+    y2 = ops.csd_matmul(x, w, bp, backend="pallas", block_m=8,
+                        interpret=True)
+    np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
+
+
+# -- flash attention sweep ------------------------------------------------------
+
+ATTN_CASES = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=8),
+    dict(causal=True, logit_softcap=30.0),
+    dict(causal=True, window=16, logit_softcap=50.0),
+]
+
+
+@pytest.mark.parametrize("kwargs", ATTN_CASES)
+@pytest.mark.parametrize("dims", [(2, 32, 32, 4, 2, 8), (1, 16, 16, 4, 4, 16),
+                                  (2, 16, 16, 8, 1, 8)])
+def test_flash_attention_vs_ref(kwargs, dims):
+    b, sq, skv, hq, hkv, dh = dims
+    q = jax.random.normal(jax.random.key(1), (b, sq, hq, dh))
+    k = jax.random.normal(jax.random.key(2), (b, skv, hkv, dh))
+    v = jax.random.normal(jax.random.key(3), (b, skv, hkv, dh))
+    o_ref = ref.mha_ref(q, k, v, **kwargs)
+    o = flash_attention(q, k, v, block_q=8, block_k=8, interpret=True,
+                        **kwargs)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    b, s, hq, hkv, dh = 2, 32, 4, 2, 8
+    q = jax.random.normal(jax.random.key(1), (b, s, hq, dh), dtype)
+    k = jax.random.normal(jax.random.key(2), (b, s, hkv, dh), dtype)
+    v = jax.random.normal(jax.random.key(3), (b, s, hkv, dh), dtype)
+    o_ref = ref.mha_ref(q, k, v, causal=True)
+    o = flash_attention(q, k, v, block_q=8, block_k=8, interpret=True,
+                        causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_decode_offset():
+    b, skv, hq, hkv, dh = 2, 32, 4, 2, 8
+    q = jax.random.normal(jax.random.key(1), (b, 1, hq, dh))
+    k = jax.random.normal(jax.random.key(2), (b, skv, hkv, dh))
+    v = jax.random.normal(jax.random.key(3), (b, skv, hkv, dh))
+    for off in (0, 13, 31):
+        o_ref = ref.mha_ref(q, k, v, causal=True, q_offset=off)
+        o = flash_attention(q, k, v, causal=True, q_offset=off, block_q=1,
+                            block_k=8, interpret=True)
+        np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)

@@ -1,0 +1,143 @@
+"""Property-based tests of the paper's pattern invariants (core.sparsity)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    JunctionSpec, clashfree_pattern, clashfree_schedule,
+    count_access_patterns, degrees_for_density, disconnected_left,
+    in_degrees, make_pattern, out_degrees, pattern_from_schedule,
+    possible_densities, quantize_density, schedule_is_clash_free,
+    structured_pattern, to_mask, transpose_pattern,
+)
+
+
+# -- admissible-density structure (paper Appendix A) --------------------------
+
+
+@given(st.integers(2, 64), st.integers(2, 64))
+@settings(max_examples=50, deadline=None)
+def test_density_set_size_is_gcd(n_left, n_right):
+    ds = possible_densities(n_left, n_right)
+    assert len(ds) == math.gcd(n_left, n_right)
+    assert np.isclose(ds[-1], 1.0)
+
+
+@given(st.integers(2, 64), st.integers(2, 64),
+       st.floats(0.01, 1.0, allow_nan=False))
+@settings(max_examples=50, deadline=None)
+def test_degrees_satisfy_structured_constraint(n_left, n_right, rho):
+    d_out, d_in = degrees_for_density(n_left, n_right, rho)
+    # paper eq. (6): N_{i-1} d_out = N_i d_in, both natural numbers
+    assert n_left * d_out == n_right * d_in
+    assert 1 <= d_in <= n_left
+    assert 1 <= d_out <= n_right
+
+
+# -- structured patterns: exact degrees, no duplicate edges --------------------
+
+
+@st.composite
+def junctions(draw):
+    g = draw(st.integers(2, 8))
+    a = draw(st.integers(1, 8))
+    b = draw(st.integers(1, 8))
+    n_left, n_right = g * a, g * b
+    k = draw(st.integers(1, g))
+    d_in = k * (n_left // g)
+    return JunctionSpec(n_left, n_right, d_in)
+
+
+@given(junctions(), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_structured_pattern_degrees(spec, seed):
+    pat = structured_pattern(spec, np.random.default_rng(seed))
+    assert (in_degrees(pat) == spec.d_in).all()
+    assert (out_degrees(pat) == spec.d_out).all()
+    # no duplicate edges
+    assert to_mask(pat).sum() == spec.n_edges
+
+
+@given(junctions(), st.integers(0, 5), st.integers(1, 3),
+       st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_clashfree_pattern_is_structured_and_clash_free(spec, seed, cf_type,
+                                                        dither):
+    # pick a z dividing both n_left and n_edges
+    z = math.gcd(spec.n_left, spec.n_edges)
+    rng = np.random.default_rng(seed)
+    sched = clashfree_schedule(spec, z, rng, cf_type, dither)
+    assert schedule_is_clash_free(sched, spec.n_left // z)
+    pat = clashfree_pattern(spec, z, np.random.default_rng(seed),
+                            cf_type, dither)
+    assert (in_degrees(pat) == spec.d_in).all()
+    assert (out_degrees(pat) == spec.d_out).all()
+    assert to_mask(pat).sum() == spec.n_edges
+
+
+def test_type1_never_duplicates():
+    # type-1: same left neuron => same bank => slot gap >= n_left (see
+    # sparsity.clashfree_pattern docstring); check exhaustively for a grid
+    for n_left, n_right, d_in, z in [(12, 8, 3, 4), (16, 16, 4, 8),
+                                     (24, 6, 8, 12), (8, 32, 2, 8)]:
+        spec = JunctionSpec(n_left, n_right, d_in)
+        for seed in range(10):
+            pat = clashfree_pattern(spec, z, np.random.default_rng(seed), 1)
+            srt = np.sort(pat.idx, axis=1)
+            assert not (srt[:, 1:] == srt[:, :-1]).any()
+
+
+# -- transpose pattern (BP adjacency) ------------------------------------------
+
+
+@given(junctions(), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_transpose_pattern_roundtrip(spec, seed):
+    pat = structured_pattern(spec, np.random.default_rng(seed))
+    ridx = transpose_pattern(pat)
+    # every (l -> (j, f)) entry must satisfy idx[j, f] == l
+    for l in range(spec.n_left):
+        for g in range(spec.d_out):
+            j, f = ridx[l, g]
+            assert pat.idx[j, f] == l
+
+
+# -- random patterns can disconnect neurons (paper §IV-B) -----------------------
+
+
+def test_random_sparsity_disconnects_at_low_density():
+    rng_hits = 0
+    for seed in range(20):
+        pat = make_pattern(100, 50, 0.02, method="random", seed=seed)
+        rng_hits += disconnected_left(pat) > 0
+    # at rho=2%, ~1 edge per left neuron on average: disconnections are
+    # near-certain in most draws
+    assert rng_hits >= 15
+
+
+def test_structured_never_disconnects():
+    for seed in range(10):
+        pat = make_pattern(100, 50, 0.02, method="structured", seed=seed)
+        assert disconnected_left(pat) == 0
+
+
+# -- pattern-count formulas (paper Appendix C, Table III) -----------------------
+
+
+def test_table3_pattern_counts():
+    spec = JunctionSpec(12, 12, 2)  # Table III junction
+    z = 4
+    # type 1, no dither: D^z = 3^4 = 81
+    assert np.isclose(10 ** count_access_patterns(spec, z, 1, False), 81)
+    # type 2, no dither: D^(z d_out) = 3^8 = 6561
+    assert np.isclose(10 ** count_access_patterns(spec, z, 2, False), 6561)
+    # type 3, no dither: (D!)^(z d_out) = 6^8 = 1679616 ~ 1.68M
+    assert np.isclose(10 ** count_access_patterns(spec, z, 3, False),
+                      1679616)
+
+
+def test_quantize_density_monotone():
+    assert quantize_density(800, 100, 0.2) >= 0.2 - 1e-9
+    assert quantize_density(800, 100, 1.0) == 1.0

@@ -1,0 +1,79 @@
+"""Cross-mode equivalence of the sparse junction + hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SparseLinear, SparseLinearSpec, block_weights_to_dense,
+    dense_weights_to_gather, gather_weights_to_dense, make_block_pattern,
+    storage_cost,
+)
+from repro.core.sparse_linear import (
+    block_gather_apply, block_scatter_apply, gather_apply,
+)
+
+
+def test_gather_matches_masked_dense():
+    spec = SparseLinearSpec(24, 16, rho=0.5, mode="gather", seed=1)
+    layer = SparseLinear(spec)
+    p = layer.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (5, 24))
+    y = layer(p, x)
+    wd = gather_weights_to_dense(p["w"], layer.pattern.idx, 24)
+    np.testing.assert_allclose(y, x @ wd + p["b"], atol=1e-5, rtol=1e-5)
+
+
+def test_dense_roundtrip():
+    spec = SparseLinearSpec(24, 16, rho=0.5, mode="gather", seed=2)
+    layer = SparseLinear(spec)
+    p = layer.init(jax.random.key(0))
+    wd = gather_weights_to_dense(p["w"], layer.pattern.idx, 24)
+    w2 = dense_weights_to_gather(wd, layer.pattern.idx)
+    np.testing.assert_allclose(w2, p["w"], atol=1e-6)
+
+
+@given(st.sampled_from([(32, 16, 8, 8), (64, 32, 16, 8), (48, 48, 8, 8)]),
+       st.sampled_from([0.25, 0.5, 0.75]), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_block_modes_agree(dims, rho, seed):
+    n_in, n_out, bl, br = dims
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=seed)
+    x = jax.random.normal(jax.random.key(seed), (3, n_in))
+    w = jax.random.normal(jax.random.key(seed + 1),
+                          (bp.n_rb, bp.d_in_b, bl, br))
+    y_g = block_gather_apply(x, w, bp.block_idx, bl, br)
+    y_s = block_scatter_apply(x, w, bp.out_idx, bp.out_slot, bl, br)
+    y_d = x @ block_weights_to_dense(w, bp)
+    np.testing.assert_allclose(y_g, y_d, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(y_s, y_d, atol=1e-4, rtol=1e-4)
+
+
+def test_block_pattern_density_and_mask():
+    bp = make_block_pattern(128, 64, 0.5, block_in=16, block_out=16, seed=0)
+    mask = bp.to_mask()
+    assert mask.shape == (128, 64)
+    assert np.isclose(mask.mean(), bp.density)
+    # every right block has exactly d_in_b feeding blocks
+    bm = bp.to_block_mask()
+    assert (bm.sum(0) == bp.d_in_b).all()
+
+
+def test_storage_cost_matches_paper_table1():
+    fc = storage_cost((800, 100, 10))
+    sp = storage_cost((800, 100, 10), d_in=[160, 100])
+    assert fc.total == 85930     # paper Table I, FC column
+    assert sp.total == 21930     # paper Table I, sparse column
+    assert fc.w == 81000 and sp.w == 17000
+    # memory reduction 3.9x (paper §III-A)
+    assert 3.8 < fc.total / sp.total < 4.0
+
+
+def test_sparse_weight_count_scales_with_density():
+    for rho in (0.25, 0.5, 1.0):
+        spec = SparseLinearSpec(128, 128, rho=rho, mode="block_gather",
+                                block_in=16, block_out=16)
+        layer = SparseLinear(spec)
+        assert layer.n_weights == pytest.approx(rho * 128 * 128, rel=0.01)
