@@ -4,6 +4,16 @@ Wall-clock on this host CPU (XLA path; the Pallas path targets TPU), at
 several densities. ``derived`` reports the speedup over dense and the
 effective GFLOP/s. The paper's complexity claim (compute scales with |W|)
 is checked directly: flops_ratio ~= rho.
+
+Also times the fused bias+activation epilogue against the unfused
+(matmul, then separate bias/relu) form, forward and full train-step
+(value_and_grad on w and b). Caveat for reading the numbers: on this XLA
+CPU path both forms jit to essentially the same HLO (XLA fuses the
+elementwise epilogue either way, and the fused VJP's cotangent masking
+matches what autodiff derives), so the ``fused_*`` rows are an
+API-parity + plumbing check hovering near 1.0x — the HBM-residency win
+of the in-kernel epilogue only exists on the Pallas/TPU path, where the
+pre-activation never leaves VMEM.
 """
 from __future__ import annotations
 
@@ -31,10 +41,38 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
                                 block_out=128, seed=0)
         w = jax.random.normal(
             jax.random.key(2), (bp.n_rb, bp.d_in_b, 128, 128)) * 0.02
+        b = jax.random.normal(jax.random.key(3), (n_out,)) * 0.02
         f = jax.jit(lambda x, w: ops.csd_matmul(x, w, bp, backend="xla"))
         t = time_call(f, x, w)
         emit(f"kernel/csd_spmm_rho{rho}", t,
              f"speedup_vs_dense={t_dense / t:.2f}x")
+
+        # fused vs unfused epilogue: forward (XLA = parity check, see
+        # module docstring; the fwd fusion win is Pallas/TPU-only)
+        unfused = jax.jit(lambda x, w, b: jax.nn.relu(
+            ops.csd_matmul(x, w, bp, backend="xla") + b))
+        fused = jax.jit(lambda x, w, b: ops.csd_matmul(
+            x, w, bp, bias=b, activation="relu", backend="xla"))
+        t_unf = time_call(unfused, x, w, b)
+        t_fus = time_call(fused, x, w, b)
+        emit(f"kernel/fused_fwd_rho{rho}", t_fus,
+             f"unfused_us={t_unf:.2f};fused_speedup={t_unf / t_fus:.2f}x")
+
+        # fused vs unfused epilogue: train step (fwd + dw/db backward)
+        def loss_unf(w, b, x):
+            return jnp.mean(jax.nn.relu(
+                ops.csd_matmul(x, w, bp, backend="xla") + b) ** 2)
+
+        def loss_fus(w, b, x):
+            return jnp.mean(ops.csd_matmul(
+                x, w, bp, bias=b, activation="relu", backend="xla") ** 2)
+
+        step_unf = jax.jit(jax.value_and_grad(loss_unf, argnums=(0, 1)))
+        step_fus = jax.jit(jax.value_and_grad(loss_fus, argnums=(0, 1)))
+        t_sunf = time_call(step_unf, w, b, x)
+        t_sfus = time_call(step_fus, w, b, x)
+        emit(f"kernel/fused_step_rho{rho}", t_sfus,
+             f"unfused_us={t_sunf:.2f};fused_speedup={t_sunf / t_sfus:.2f}x")
 
     # training-step complexity scales with density (paper's core claim)
     def step_flops(rho):

@@ -1,0 +1,39 @@
+"""Cross-version JAX compatibility shims.
+
+The repo tracks the modern JAX API surface but must run on the pinned
+jax of the container image (0.4.x line). Everything version-dependent is
+funneled through here so call sites stay clean:
+
+* ``shard_map`` — ``jax.shard_map`` (jax >= 0.6, ``check_vma=`` kwarg)
+  with a fallback to ``jax.experimental.shard_map.shard_map`` (jax 0.4.x,
+  ``check_rep=`` kwarg). The two flags mean the same thing (skip the
+  varying-manual-axes / replication check); we translate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: Optional[bool] = None,
+) -> Callable:
+    """Version-portable ``shard_map``.
+
+    Accepts the modern keyword surface (``check_vma``); on older JAX the
+    flag is forwarded as ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

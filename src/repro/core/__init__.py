@@ -34,8 +34,6 @@ from .sparse_linear import (  # noqa: F401
     SparseLinear,
     SparseLinearSpec,
     gather_apply,
-    block_gather_apply,
-    block_scatter_apply,
     masked_dense_apply,
     gather_weights_to_dense,
     block_weights_to_dense,

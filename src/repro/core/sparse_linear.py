@@ -11,14 +11,20 @@ Three execution modes, one statistical family:
                pattern ``idx[j, f]``; compute and storage scale with density.
                This is the literal per-edge formulation of eq. (2a).
 * ``block``  — TPU-native block-circulant form (``BlockPattern``): weights
-               ``(n_rb, d_in_b, bL, bR)``. Two algebraically equivalent
-               applications:
-               - *gather* (column-parallel): each right block pulls its
-                 ``d_in_b`` left blocks — output sharding friendly;
-               - *scatter* (row-parallel): each left block pushes into the
-                 right blocks it feeds (segment-sum) — input sharding
-                 friendly, yields partial sums that GSPMD turns into the
+               ``(n_rb, d_in_b, bL, bR)``. Both block modes execute through
+               the ONE accelerated junction primitive,
+               ``kernels.ops.csd_matmul`` (``backend="auto"``: Pallas
+               kernels on TPU, slot-wise XLA elsewhere), with bias and the
+               layer activation fused into the kernel epilogue. The mode
+               only selects the XLA ``dataflow``:
+               - ``block_gather`` (column-parallel): each right block pulls
+                 its ``d_in_b`` left blocks — output sharding friendly;
+               - ``block_scatter`` (row-parallel): each left block pushes
+                 partial sums into the right blocks it feeds — input
+                 sharding friendly; GSPMD turns the segment-sum into the
                  Megatron-style all-reduce.
+               The old materializing einsum forms live on as oracles in
+               ``kernels.ref`` (``block_gather_ref``/``block_scatter_ref``).
 
 All modes share initialization: He/fan-in scaling with the *actual* in-degree
 (d_in, not n_in), matching the paper's use of He init on sparse junctions.
@@ -33,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kops
 from . import sparsity
 from .block_pattern import BlockPattern, make_block_pattern
 
@@ -123,28 +130,36 @@ class SparseLinear:
 
     # -- forward -----------------------------------------------------------
 
-    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+    def __call__(self, params: dict, x: jax.Array,
+                 activation: Optional[str] = None) -> jax.Array:
+        """Apply the junction: ``activation(x @ W_sparse + b)``.
+
+        ``activation`` (``None | "relu" | "gelu"``) lets callers fuse the
+        following nonlinearity into the junction — for the block modes it
+        rides the ``csd_matmul`` kernel epilogue and never round-trips HBM;
+        the other modes apply it inline.
+        """
         s = self.spec
         w = params["w"]
+        b = params["b"] if s.use_bias else None
+        if self._mode in ("block_gather", "block_scatter"):
+            # the single accelerated junction path (tentpole): bias +
+            # activation fused into the kernel epilogue.
+            return kops.csd_matmul(
+                x, w, self.pattern, bias=b, activation=activation,
+                backend="auto",
+                dataflow="scatter" if self._mode == "block_scatter"
+                else "gather")
         if self._mode == "dense":
             y = x @ w
         elif self._mode == "mask":
             mask = jnp.asarray(sparsity.to_mask(self.pattern), w.dtype)
             y = x @ (w * mask)
-        elif self._mode == "gather":
+        else:  # gather
             y = gather_apply(x, w, self.pattern.idx)
-        elif self._mode == "block_gather":
-            y = block_gather_apply(x, w, self.pattern.block_idx,
-                                   self.pattern.block_in,
-                                   self.pattern.block_out)
-        else:  # block_scatter
-            y = block_scatter_apply(x, w, self.pattern.out_idx,
-                                    self.pattern.out_slot,
-                                    self.pattern.block_in,
-                                    self.pattern.block_out)
-        if s.use_bias:
-            y = y + params["b"].astype(y.dtype)
-        return y
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return kops.apply_activation(y, activation)
 
     # -- bookkeeping -------------------------------------------------------
 
@@ -171,46 +186,6 @@ def gather_apply(x: jax.Array, w: jax.Array, idx: np.ndarray) -> jax.Array:
     xg = jnp.take(x, idx.reshape(-1), axis=-1)  # (..., n_out*d_in)
     xg = xg.reshape(x.shape[:-1] + idx.shape)
     return jnp.einsum("...jf,jf->...j", xg, w)
-
-
-def block_gather_apply(x: jax.Array, w: jax.Array, block_idx: np.ndarray,
-                       bl: int, br: int) -> jax.Array:
-    """Column-parallel block-sparse matmul.
-
-    x: (..., n_in) -> (..., n_out); w: (n_rb, d_in_b, bL, bR).
-    """
-    n_rb, d_in_b = block_idx.shape
-    lead = x.shape[:-1]
-    xb = x.reshape(lead + (-1, bl))  # (..., n_lb, bL)
-    g = jnp.take(xb, jnp.asarray(block_idx.reshape(-1)), axis=-2)
-    g = g.reshape(lead + (n_rb, d_in_b, bl))
-    y = jnp.einsum("...rfl,rflo->...ro", g, w)
-    return y.reshape(lead + (n_rb * br,))
-
-
-def block_scatter_apply(x: jax.Array, w: jax.Array, out_idx: np.ndarray,
-                        out_slot: np.ndarray, bl: int, br: int) -> jax.Array:
-    """Row-parallel block-sparse matmul (scatter/segment-sum form).
-
-    Each left block lb pushes ``x_b[lb] @ w[out_idx[lb,g], out_slot[lb,g]]``
-    into right block ``out_idx[lb, g]``. Algebraically identical to
-    ``block_gather_apply``; the different dataflow gives GSPMD the
-    row-parallel (input-sharded, output-all-reduced) lowering.
-    """
-    n_lb, d_out_b = out_idx.shape
-    lead = x.shape[:-1]
-    xb = x.reshape(lead + (n_lb, bl))
-    # wt[lb, g] = w[out_idx[lb,g], out_slot[lb,g]]  (n_lb, d_out_b, bL, bR)
-    wt = w[jnp.asarray(out_idx), jnp.asarray(out_slot)]
-    p = jnp.einsum("...li,lgio->...lgo", xb, wt)
-    # scatter-add partial products into right blocks
-    seg = jnp.asarray(out_idx.reshape(-1))  # (n_lb*d_out_b,)
-    n_rb = int(out_idx.max()) + 1
-    pf = p.reshape(lead + (n_lb * d_out_b, br))
-    y = jax.ops.segment_sum(
-        jnp.moveaxis(pf, -2, 0), seg, num_segments=n_rb)
-    y = jnp.moveaxis(y, 0, -2)
-    return y.reshape(lead + (n_rb * br,))
 
 
 def masked_dense_apply(x: jax.Array, w: jax.Array,

@@ -16,7 +16,11 @@ Mapping of the paper's architecture onto the TPU grid:
 * clash-freedom                       -> each grid step streams exactly one
   left block from HBM; a left block is never double-streamed within a step,
   and consecutive ``f`` steps revisit the same *output* tile so the partial
-  sum stays resident in VMEM (the "natural order" write of Fig. 2(b)).
+  sum stays resident in VMEM (the "natural order" write of Fig. 2(b));
+* the sigmoid/ReLU unit next to the edge processors -> the fused epilogue:
+  bias-add + activation are applied on the last fan-in slot while the
+  accumulator tile is still in VMEM, so the pre-activation never
+  round-trips HBM (see ``csd_spmm_fwd(bias=..., activation=...)``).
 
 Weight layout: ``w[n_rb, d_in_b, bL, bR]`` — right-block major, exactly the
 paper's edge numbering (§III-B: "edges are numbered sequentially ... on the
@@ -40,10 +44,44 @@ from jax.experimental.pallas import tpu as pltpu
 
 # ---------------------------------------------------------------------------
 # Forward: y[m, rb] = sum_f x[m, block_idx[rb, f]] @ w[rb, f]
+#
+# Fused epilogue: on the LAST fan-in slot of each output tile the partial
+# sum is still resident in VMEM, so bias-add and the activation are applied
+# there — the pre-activation never round-trips HBM. This mirrors the FPGA
+# architecture (Dey et al. §III): the sigmoid/ReLU unit sits next to the
+# edge processors, directly on the accumulated activation memory.
 # ---------------------------------------------------------------------------
 
+# activations the fused epilogue supports. "gelu" is the tanh approximation
+# — the same function the model stack's activation registry binds to the
+# name (jax.nn.gelu default), keeping fused and unfused paths bit-comparable.
+ACTIVATIONS = ("relu", "gelu")
 
-def _fwd_kernel(idx_ref, x_ref, w_ref, y_ref, *, d_in_b: int):
+
+def apply_activation(z: jax.Array, activation: Optional[str]) -> jax.Array:
+    """The one definition of every fusable activation — used inside the
+    kernel epilogue, by the XLA fallback, and by layers applying the same
+    nonlinearity out-of-kernel, so the variants can never drift."""
+    if activation is None:
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0)
+    if activation == "gelu":
+        return jax.nn.gelu(z, approximate=True)
+    raise ValueError(f"unsupported fused activation {activation!r}")
+
+
+def _fwd_kernel(idx_ref, *refs, d_in_b: int, activation: Optional[str],
+                has_bias: bool, save_preact: bool):
+    """refs: x, w, [bias], y, [preact] (inputs then outputs)."""
+    if has_bias:
+        x_ref, w_ref, b_ref = refs[:3]
+        out_refs = refs[3:]
+    else:
+        x_ref, w_ref = refs[:2]
+        b_ref = None
+        out_refs = refs[2:]
+    y_ref = out_refs[0]
     f = pl.program_id(2)
 
     @pl.when(f == 0)
@@ -56,19 +94,37 @@ def _fwd_kernel(idx_ref, x_ref, w_ref, y_ref, *, d_in_b: int):
         x, w, (((1,), (0,)), ((), ())),
         preferred_element_type=y_ref.dtype)
 
+    if has_bias or activation is not None or save_preact:
+        @pl.when(f == d_in_b - 1)
+        def _epilogue():
+            z = y_ref[...]
+            if has_bias:
+                z = z + b_ref[...].astype(z.dtype)  # (1, bR) broadcasts
+            if save_preact:
+                out_refs[1][...] = z
+            y_ref[...] = apply_activation(z, activation)
+
 
 def csd_spmm_fwd(
     x: jax.Array,
     w: jax.Array,
     block_idx: np.ndarray,
     *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    save_preact: bool = False,
     block_m: int = 128,
     interpret: bool = False,
-) -> jax.Array:
-    """Forward block-sparse matmul.
+):
+    """Forward block-sparse matmul with optional fused bias/activation.
 
     x: (M, n_in) with n_in = n_lb*bL; w: (n_rb, d_in_b, bL, bR);
-    block_idx: (n_rb, d_in_b) int32 -> y: (M, n_rb*bR).
+    block_idx: (n_rb, d_in_b) int32; bias: (n_rb*bR,) or None ->
+    y: (M, n_rb*bR) = activation(x @ W_sparse + bias).
+
+    ``save_preact=True`` additionally returns the pre-activation
+    ``z = x @ W_sparse + bias`` (needed by the backward pass of non-masking
+    activations like gelu); the return value is then ``(y, z)``.
     """
     m, n_in = x.shape
     n_rb, d_in_b, bl, br = w.shape
@@ -76,30 +132,52 @@ def csd_spmm_fwd(
         raise ValueError("n_in not divisible by block_in")
     if m % block_m:
         raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation {activation!r}")
     acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float32) else x.dtype
 
+    has_bias = bias is not None
     grid = (m // block_m, n_rb, d_in_b)
-    kernel = functools.partial(_fwd_kernel, d_in_b=d_in_b)
-    y = pl.pallas_call(
+    kernel = functools.partial(_fwd_kernel, d_in_b=d_in_b,
+                               activation=activation, has_bias=has_bias,
+                               save_preact=save_preact)
+    in_specs = [
+        # x tile: row-block i, left-block chosen by the pattern.
+        pl.BlockSpec((block_m, bl),
+                     lambda i, r, f, idx: (i, idx[r, f])),
+        # w tile: one (bL, bR) block per (r, f).
+        pl.BlockSpec((1, 1, bl, br),
+                     lambda i, r, f, idx: (r, f, 0, 0)),
+    ]
+    operands = [jnp.asarray(block_idx, jnp.int32), x, w]
+    if has_bias:
+        # bias as (n_rb, bR): one right-block slice per output tile.
+        in_specs.append(pl.BlockSpec((1, br),
+                                     lambda i, r, f, idx: (r, 0)))
+        operands.append(bias.reshape(n_rb, br))
+    out_spec = pl.BlockSpec((block_m, br), lambda i, r, f, idx: (i, r))
+    out_shape = jax.ShapeDtypeStruct((m, n_rb * br), acc_dtype)
+    if save_preact:
+        out_specs = (out_spec, out_spec)
+        out_shapes = (out_shape, out_shape)
+    else:
+        out_specs = out_spec
+        out_shapes = out_shape
+    out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                # x tile: row-block i, left-block chosen by the pattern.
-                pl.BlockSpec((block_m, bl),
-                             lambda i, r, f, idx: (i, idx[r, f])),
-                # w tile: one (bL, bR) block per (r, f).
-                pl.BlockSpec((1, 1, bl, br),
-                             lambda i, r, f, idx: (r, f, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_m, br),
-                                   lambda i, r, f, idx: (i, r)),
+            in_specs=in_specs,
+            out_specs=out_specs,
         ),
-        out_shape=jax.ShapeDtypeStruct((m, n_rb * br), acc_dtype),
+        out_shape=out_shapes,
         interpret=interpret,
-    )(jnp.asarray(block_idx, jnp.int32), x, w)
-    return y.astype(x.dtype)
+    )(*operands)
+    if save_preact:
+        y, z = out
+        return y.astype(x.dtype), z.astype(x.dtype)
+    return out.astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,20 +1,41 @@
 """Jit'd public ops wrapping the Pallas kernels, with XLA fallbacks.
 
-``csd_matmul`` is the differentiable entry point used by the model stack.
-Backend selection:
+``csd_matmul`` is THE differentiable block-sparse junction primitive — the
+single execution path every layer in the model stack routes through
+(``core.sparse_linear.SparseLinear`` block modes, ``nn.layers.Linear``,
+``nn.mlp.SparseMLP``, the FFN junctions). It computes
+
+    y = activation(x @ W_sparse + bias)
+
+with the bias/activation epilogue *fused* into the junction: the Pallas
+kernel applies it on the last fan-in slot while the accumulator tile is
+still in VMEM (the activation never round-trips HBM), and the XLA
+fallback applies it on the slot-wise accumulator so XLA fuses it into the
+final slot's consumer. Backend selection:
 
 * ``backend="pallas"``    — pl.pallas_call kernels (TPU; ``interpret=True``
                             executes the same kernel bodies on CPU and is
                             what the test suite sweeps);
-* ``backend="xla"``       — gather-einsum forms (GSPMD-friendly; what the
-                            multi-pod dry-run lowers, letting the SPMD
-                            partitioner place collectives);
+* ``backend="xla"``       — slot-wise gather/scatter einsum forms
+                            (GSPMD-friendly; what the multi-pod dry-run
+                            lowers, letting the SPMD partitioner place
+                            collectives);
 * ``backend="auto"``      — pallas on TPU, xla elsewhere.
+
+``dataflow`` picks the XLA lowering of the forward: ``"gather"`` is
+column-parallel (each right block pulls its fan-in — output-sharding
+friendly), ``"scatter"`` is row-parallel (each left block pushes partial
+sums — input-sharding friendly, GSPMD turns the segment-sum into the
+Megatron-style all-reduce). Both are algebraically identical; the Pallas
+kernel serves both.
 
 The custom VJP wires the paper's three operations exactly as the hardware
 does (Fig. 3): FF = ``csd_spmm_fwd``, BP = ``csd_spmm_dx`` over the
 *transpose* pattern, UP = ``csd_spmm_dw``; all three share one weight
-layout, the paper's single weight memory bank.
+layout, the paper's single weight memory bank. The fused epilogue's
+gradient is handled by masking the incoming cotangent (relu: sign of the
+saved output; gelu: derivative at the saved pre-activation) before it
+enters BP/UP.
 """
 from __future__ import annotations
 
@@ -27,6 +48,8 @@ import numpy as np
 
 from ..core.block_pattern import BlockPattern
 from . import csd_spmm, ref
+from .csd_spmm import apply_activation  # noqa: F401 — re-export: layers
+#   applying the nonlinearity out-of-kernel use the same one definition
 
 
 def _on_tpu() -> bool:
@@ -73,6 +96,29 @@ class _Pat:
 # ---------------------------------------------------------------------------
 
 
+def _acc_dtype(dtype, n_slots):
+    """Cross-slot accumulator dtype: each dot already accumulates in f32
+    internally; for few slots a bf16 running sum halves the dominant
+    accumulator HBM traffic at negligible numeric cost."""
+    if dtype == jnp.bfloat16:
+        return dtype if n_slots <= 8 else jnp.float32
+    return dtype
+
+
+def _slot_sweep(slot, acc0, xs):
+    """Accumulate ``slot`` over the fan slots (leading dim of every array
+    in ``xs``): unrolled for small fan so XLA fuses the short chain,
+    ``lax.scan`` otherwise. Shared by every slot-wise XLA form so the
+    unroll threshold / accumulator policy cannot diverge between them."""
+    n_slots = xs[0].shape[0]
+    if n_slots <= 4:
+        for i in range(n_slots):
+            acc0, _ = slot(acc0, tuple(x[i] for x in xs))
+        return acc0
+    y, _ = jax.lax.scan(slot, acc0, xs)
+    return y
+
+
 def _xla_fwd(x, w, pat):
     """x: (..., n_in) — leading dims preserved so GSPMD keeps their
     (batch, seq) sharding through the take/einsum chain (flattening them
@@ -88,18 +134,34 @@ def _xla_fwd(x, w, pat):
         y_f = jnp.einsum("...ri,rio->...ro", lhs, w_f.astype(lhs.dtype))
         return acc + y_f.astype(acc.dtype), None
 
-    # cross-slot accumulator: each dot already accumulates in f32
-    # internally; for few slots a bf16 running sum halves the dominant
-    # accumulator HBM traffic at negligible numeric cost
-    acc_dt = x.dtype if (x.dtype == jnp.bfloat16 and d_in_b <= 8) \
-        else (jnp.float32 if x.dtype == jnp.bfloat16 else x.dtype)
-    acc0 = jnp.zeros(lead + (n_rb, br), acc_dt)
-    if d_in_b <= 4:
-        for f in range(d_in_b):
-            acc0, _ = slot(acc0, (idx[f], w[:, f]))
-        y = acc0
-    else:
-        y, _ = jax.lax.scan(slot, acc0, (idx, jnp.moveaxis(w, 1, 0)))
+    acc0 = jnp.zeros(lead + (n_rb, br), _acc_dtype(x.dtype, d_in_b))
+    y = _slot_sweep(slot, acc0, (idx, jnp.moveaxis(w, 1, 0)))
+    return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
+
+
+def _xla_fwd_scatter(x, w, pat):
+    """Row-parallel slot-wise forward: each left block pushes its partial
+    product into the right blocks it feeds (segment-sum over the reverse
+    adjacency). Same O(one output intermediate) peak as ``_xla_fwd``; the
+    different dataflow gives GSPMD the input-sharded lowering."""
+    n_rb, d_in_b, bl, br = w.shape
+    n_lb, d_out_b = pat.out_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (n_lb, bl))
+    oidx = jnp.asarray(pat.out_idx.T)    # (d_out_b, n_lb)
+    oslot = jnp.asarray(pat.out_slot.T)
+
+    def slot(acc, inp):
+        oi, os = inp
+        w_g = w[oi, os].astype(xb.dtype)            # (n_lb, bL, bR)
+        p = jnp.einsum("...li,lio->...lo", xb, w_g)
+        contrib = jax.ops.segment_sum(
+            jnp.moveaxis(p.astype(acc.dtype), -2, 0), oi,
+            num_segments=n_rb)
+        return acc + jnp.moveaxis(contrib, 0, -2), None
+
+    acc0 = jnp.zeros(lead + (n_rb, br), _acc_dtype(x.dtype, d_out_b))
+    y = _slot_sweep(slot, acc0, (oidx, oslot))
     return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
 
 
@@ -118,15 +180,8 @@ def _xla_dx(dy, w, pat):
         d = jnp.einsum("...lo,lio->...li", lhs, w_g)
         return acc + d.astype(acc.dtype), None
 
-    acc_dt = dy.dtype if (dy.dtype == jnp.bfloat16 and d_out_b <= 8) \
-        else (jnp.float32 if dy.dtype == jnp.bfloat16 else dy.dtype)
-    acc0 = jnp.zeros(lead + (n_lb, bl), acc_dt)
-    if d_out_b <= 4:
-        for g in range(d_out_b):
-            acc0, _ = slot(acc0, (oidx[g], oslot[g]))
-        dx = acc0
-    else:
-        dx, _ = jax.lax.scan(slot, acc0, (oidx, oslot))
+    acc0 = jnp.zeros(lead + (n_lb, bl), _acc_dtype(dy.dtype, d_out_b))
+    dx = _slot_sweep(slot, acc0, (oidx, oslot))
     return dx.reshape(lead + (n_lb * bl,)).astype(dy.dtype)
 
 
@@ -152,28 +207,78 @@ def _xla_dw(x, dy, pat):
     return dw.astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _csd_matmul(x, w, pat: _Pat, backend: str, block_m: int, interpret: bool):
-    return _fwd_impl(x, w, pat, backend, block_m, interpret)
+# ---------------------------------------------------------------------------
+# Differentiable core. Signature: (x, w, b) differentiable; everything else
+# static. ``b`` is a zero-length placeholder when has_bias is False so the
+# custom_vjp arity stays fixed.
+# ---------------------------------------------------------------------------
 
 
-def _fwd_impl(x, w, pat, backend, block_m, interpret):
+def _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
+              block_m, interpret, want_preact=False):
+    """Returns (y, preact): preact is the pre-activation z = xW + b when the
+    caller is the VJP forward and the backward needs it (gelu), else None
+    (relu recovers its mask from y; the primal never pays for the extra
+    kernel output)."""
     if backend == "pallas":
-        return csd_spmm.csd_spmm_fwd(x, w, pat.block_idx, block_m=block_m,
-                                     interpret=interpret)
-    return _xla_fwd(x, w, pat)
+        bias = b if has_bias else None
+        if activation == "gelu" and want_preact:
+            return csd_spmm.csd_spmm_fwd(
+                x, w, pat.block_idx, bias=bias, activation="gelu",
+                save_preact=True, block_m=block_m, interpret=interpret)
+        y = csd_spmm.csd_spmm_fwd(
+            x, w, pat.block_idx, bias=bias, activation=activation,
+            block_m=block_m, interpret=interpret)
+        return y, None
+    fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
+    z = fwd(x, w, pat)
+    if has_bias:
+        z = z + b.astype(z.dtype)
+    y = csd_spmm.apply_activation(z, activation)
+    return y, (z if activation == "gelu" else None)
 
 
-def _fwd_vjp(x, w, pat, backend, block_m, interpret):
-    y = _fwd_impl(x, w, pat, backend, block_m, interpret)
-    return y, (x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _csd_matmul(x, w, b, pat: _Pat, has_bias: bool,
+                activation: Optional[str], backend: str, dataflow: str,
+                block_m: int, interpret: bool):
+    y, _ = _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
+                     block_m, interpret)
+    return y
 
 
-def _bwd_vjp(pat, backend, block_m, interpret, res, dy):
-    x, w = res
+def _fwd_vjp(x, w, b, pat, has_bias, activation, backend, dataflow,
+             block_m, interpret):
+    y, preact = _fwd_impl(x, w, b, pat, has_bias, activation, backend,
+                          dataflow, block_m, interpret, want_preact=True)
+    # relu's gradient mask is recoverable from the output itself — no extra
+    # residual; gelu needs the pre-activation the kernel emitted. b rides
+    # along so db can match its dtype exactly.
+    aux = y if activation == "relu" else preact
+    return y, (x, w, b, aux)
+
+
+def _bwd_vjp(pat, has_bias, activation, backend, dataflow, block_m,
+             interpret, res, dy):
+    x, w, b, aux = res
     # keep backward slot traffic in the compute dtype — f32 cotangents
     # double the (already dominant) gather/accumulate HBM bytes
     dy = dy.astype(x.dtype)
+    # fused-epilogue gradient: mask/scale the cotangent before it enters
+    # BP (dx) and UP (dw) — eq. (3)/(4) with the activation derivative
+    # folded into delta.
+    if activation == "relu":
+        dy = dy * (aux > 0).astype(dy.dtype)
+    elif activation == "gelu":
+        _, act_vjp = jax.vjp(
+            lambda z: jax.nn.gelu(z, approximate=True),
+            aux.astype(jnp.float32))
+        dy = act_vjp(dy.astype(jnp.float32))[0].astype(dy.dtype)
+    if has_bias:
+        db = jnp.sum(dy.astype(jnp.float32),
+                     axis=tuple(range(dy.ndim - 1))).astype(b.dtype)
+    else:
+        db = jnp.zeros((0,), b.dtype)
     if backend == "pallas":
         dx = csd_spmm.csd_spmm_dx(dy, w, pat.out_idx, pat.out_slot,
                                   block_m=block_m, interpret=interpret)
@@ -184,7 +289,7 @@ def _bwd_vjp(pat, backend, block_m, interpret, res, dy):
     else:
         dx = _xla_dx(dy, w, pat)
         dw = _xla_dw(x, dy, pat)
-    return dx, dw.astype(w.dtype)
+    return dx, dw.astype(w.dtype), db
 
 
 _csd_matmul.defvjp(_fwd_vjp, _bwd_vjp)
@@ -195,17 +300,31 @@ def csd_matmul(
     w: jax.Array,
     pattern: BlockPattern,
     *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
     backend: str = "auto",
+    dataflow: str = "gather",
     block_m: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """Differentiable block-sparse matmul: (..., n_in) -> (..., n_out).
+    """Differentiable block-sparse junction: (..., n_in) -> (..., n_out),
+    computing ``activation(x @ W_sparse + bias)`` with the epilogue fused
+    into the matmul (see module docstring).
 
-    Leading dims are flattened to M; M is padded to ``block_m`` for the
-    Pallas path. The pattern is compile-time static.
+    ``activation`` is ``None | "relu" | "gelu"`` (gelu = tanh approximation,
+    matching the model stack's activation registry). Leading dims are
+    flattened to M and padded to ``block_m`` for the Pallas path; the XLA
+    path keeps leading dims intact so GSPMD preserves their sharding. The
+    pattern is compile-time static.
     """
+    if activation is not None and activation not in csd_spmm.ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation {activation!r}")
+    if dataflow not in ("gather", "scatter"):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
     backend = _resolve(backend)
     pat = _Pat(pattern)
+    has_bias = bias is not None
+    b = bias if has_bias else jnp.zeros((0,), x.dtype)
     if backend == "pallas":
         lead = x.shape[:-1]
         n_in = x.shape[-1]
@@ -214,9 +333,11 @@ def csd_matmul(
         pad = (-m) % block_m
         if pad:
             xf = jnp.pad(xf, ((0, pad), (0, 0)))
-        y = _csd_matmul(xf, w, pat, backend, block_m, interpret)
+        y = _csd_matmul(xf, w, b, pat, has_bias, activation, backend,
+                        dataflow, block_m, interpret)
         if pad:
             y = y[:m]
         return y.reshape(lead + (y.shape[-1],))
     # xla: leading dims flow through untouched (sharding preserved)
-    return _csd_matmul(x, w, pat, backend, block_m, interpret)
+    return _csd_matmul(x, w, b, pat, has_bias, activation, backend,
+                       dataflow, block_m, interpret)

@@ -26,6 +26,45 @@ def csd_spmm_fwd_ref(x: jax.Array, w: jax.Array,
     return y.reshape(m, n_rb * br).astype(x.dtype)
 
 
+def block_gather_ref(x: jax.Array, w: jax.Array, block_idx: np.ndarray,
+                     bl: int, br: int) -> jax.Array:
+    """Column-parallel block-sparse matmul oracle (materializing einsum).
+
+    Formerly ``core.sparse_linear.block_gather_apply`` — demoted here when
+    the layer stack unified on ``ops.csd_matmul``; kept as the gather-form
+    ground truth for the equivalence tests.
+    """
+    n_rb, d_in_b = block_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (-1, bl))  # (..., n_lb, bL)
+    g = jnp.take(xb, jnp.asarray(block_idx.reshape(-1)), axis=-2)
+    g = g.reshape(lead + (n_rb, d_in_b, bl))
+    y = jnp.einsum("...rfl,rflo->...ro", g, w)
+    return y.reshape(lead + (n_rb * br,))
+
+
+def block_scatter_ref(x: jax.Array, w: jax.Array, out_idx: np.ndarray,
+                      out_slot: np.ndarray, bl: int, br: int) -> jax.Array:
+    """Row-parallel block-sparse matmul oracle (segment-sum form).
+
+    Formerly ``core.sparse_linear.block_scatter_apply``; algebraically
+    identical to ``block_gather_ref`` over the transposed adjacency.
+    """
+    n_lb, d_out_b = out_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (n_lb, bl))
+    # wt[lb, g] = w[out_idx[lb,g], out_slot[lb,g]]  (n_lb, d_out_b, bL, bR)
+    wt = w[jnp.asarray(out_idx), jnp.asarray(out_slot)]
+    p = jnp.einsum("...li,lgio->...lgo", xb, wt)
+    seg = jnp.asarray(out_idx.reshape(-1))  # (n_lb*d_out_b,)
+    n_rb = int(out_idx.max()) + 1
+    pf = p.reshape(lead + (n_lb * d_out_b, br))
+    y = jax.ops.segment_sum(
+        jnp.moveaxis(pf, -2, 0), seg, num_segments=n_rb)
+    y = jnp.moveaxis(y, 0, -2)
+    return y.reshape(lead + (n_rb * br,))
+
+
 def csd_spmm_dx_ref(dy: jax.Array, w: jax.Array, out_idx: np.ndarray,
                     out_slot: np.ndarray) -> jax.Array:
     n_rb, d_in_b, bl, br = w.shape

@@ -108,7 +108,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_cost.xla_cost_analysis(compiled)
     if verbose:
         print(f"--- {arch} x {shape_name} ({'multi' if multi_pod else 'single'}-pod, {chips} chips)")
         print(mem)

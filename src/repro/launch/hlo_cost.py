@@ -317,6 +317,24 @@ class HloCostModel:
         return self.comp_cost(self.entry)
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Old JAX (<= 0.4.x) returns a *list* of per-program dicts (usually one);
+    newer JAX returns the dict directly. Always returns one flat dict,
+    summing duplicate keys across programs.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, dict):
+        return cost
+    out: Dict[str, float] = {}
+    for prog in cost or []:
+        for k, v in (prog or {}).items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+    return out
+
+
 def analyze(hlo_text: str) -> dict:
     cost = HloCostModel(hlo_text).total()
     return {

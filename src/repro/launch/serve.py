@@ -49,6 +49,9 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--enc-len", type=int, default=None,
+                    help="encoder frames for enc-dec archs "
+                         "(default: --prompt-len)")
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
 
@@ -59,16 +62,24 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
+    # the decoder prompt (text tokens); for enc-dec archs this seeds the
+    # decoder while the frontend embeddings feed the encoder
     prompt = jnp.asarray(rng.integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+
+    def frames(length):
+        return jnp.asarray(rng.normal(
+            size=(args.batch, length, cfg.frontend_dim)), jnp.float32)
+
     extra = None
-    if cfg.input_mode == "embeddings" or cfg.enc_dec is not None:
-        extra = {"embeds": jnp.asarray(rng.normal(
-            size=(args.batch, args.prompt_len, cfg.frontend_dim)),
-            jnp.float32)}
-        if cfg.enc_dec is None:
-            extra = {"embeds": extra["embeds"]}
-    batch = {"tokens": prompt}
+    if cfg.enc_dec is not None:
+        # enc-dec (seamless-style): stub frontend frames for the encoder,
+        # token prompt for the decoder
+        extra = {"embeds": frames(args.enc_len or args.prompt_len)}
+    elif cfg.input_mode == "embeddings":
+        # decoder-only with stub frontend (vlm/audio): the prefill consumes
+        # embeddings aligned with the prompt span; decode embeds text tokens
+        extra = {"embeds": frames(args.prompt_len)}
     toks, tps = generate(model, params, prompt,
                          args.prompt_len + args.gen, args.gen,
                          extra_batch=extra)

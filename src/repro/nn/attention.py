@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from .common import ModelConfig, current_mesh, logical_to_spec, shard
 from .layers import Linear, RMSNorm, apply_rope
 
@@ -200,7 +201,7 @@ def seq_parallel_attention(
         return chunked_attention(qg_l, k_l, v_l,
                                  q_offset=idx * s_local, **kw)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(spec_q, spec_kv, spec_kv),
         out_specs=spec_q, check_vma=False)

@@ -86,7 +86,9 @@ class SparsityConfig:
     block_in: int = 256
     block_out: int = 1024
     seed: int = 0
-    backend: str = "xla"  # xla | pallas (pallas only on real TPUs)
+    # auto = pallas on TPU, xla elsewhere; all junctions route through the
+    # one csd_matmul primitive either way
+    backend: str = "auto"  # auto | xla | pallas
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from .common import ModelConfig, MoEConfig, current_mesh, shard
 from .layers import Linear, activation
 
@@ -70,12 +71,23 @@ class FFN:
             s["gate"] = self.gate.spec()
         return s
 
+    # activation names the fused csd_matmul epilogue understands (the
+    # registry binds gelu and gelu_tanh to the same tanh-approx function)
+    _FUSABLE = {"relu": "relu", "gelu": "gelu", "gelu_tanh": "gelu"}
+
     def __call__(self, params: dict, x: jax.Array) -> jax.Array:
-        h = self.up(params["up"], x)
+        fused = self._FUSABLE.get(self.cfg.act)
         if self.gate is not None:
-            h = self.act(self.gate(params["gate"], x)) * h
+            h = self.up(params["up"], x)
+            # the activation fuses into the *gate* junction's epilogue
+            g = self.gate(params["gate"], x, activation=fused)
+            if fused is None:
+                g = self.act(g)
+            h = g * h
         else:
-            h = self.act(h)
+            h = self.up(params["up"], x, activation=fused)
+            if fused is None:
+                h = self.act(h)
         h = shard(h, "batch", "seq", "mlp_act")
         return self.down(params["down"], h)
 
@@ -243,7 +255,7 @@ class MoE:
             aux = {n: jax.lax.pmean(v, all_axes) for n, v in aux.items()}
             return y[:t_loc].reshape(b, s, d), aux
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local_fn, mesh=mesh,
             in_specs=(r_spec, w_spec, w_spec, w_spec, x_spec),
             out_specs=(x_spec, {n: P() for n in ("moe_lb", "moe_z")}),

@@ -97,17 +97,23 @@ class Linear:
             s["b"] = (None,)
         return s
 
-    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+    def __call__(self, params: dict, x: jax.Array,
+                 activation: Optional[str] = None) -> jax.Array:
+        """``activation(x @ W + b)``. For sparse junctions the bias and
+        activation ride the fused ``csd_matmul`` epilogue (one kernel, no
+        HBM round-trip of the pre-activation); dense junctions apply them
+        inline. ``activation`` is ``None | "relu" | "gelu"``."""
         w = params["w"]
         cdt = x.dtype
         if self.is_sparse:
-            y = kops.csd_matmul(x, w.astype(cdt), self.pattern,
-                                backend=self.backend)
-        else:
-            y = x @ w.astype(cdt)
+            b = params["b"].astype(cdt) if self.bias else None
+            return kops.csd_matmul(x, w.astype(cdt), self.pattern,
+                                   bias=b, activation=activation,
+                                   backend=self.backend)
+        y = x @ w.astype(cdt)
         if self.bias:
             y = y + params["b"].astype(cdt)
-        return y
+        return kops.apply_activation(y, activation)
 
 
 class RMSNorm:
@@ -171,6 +177,8 @@ class Embedding:
         and one small psum over the vocab axis assembles the rows.
         """
         from jax.sharding import PartitionSpec as P
+
+        from ..compat import shard_map
         from .common import current_mesh, logical_to_spec
 
         mesh = current_mesh()
@@ -193,7 +201,7 @@ class Embedding:
             g = jnp.where(ok[..., None], g, jnp.zeros((), g.dtype))
             return jax.lax.psum(g, vax)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh, in_specs=(spec_t, spec_i),
             out_specs=P(spec_i[0], None, None), check_vma=False)
         return fn(t, tokens)

@@ -10,7 +10,11 @@ Figs. 6-12.
 learning dynamics to per-edge processing (the gradient of a masked weight is
 the masked gradient), at dense-matmul speed — this is what the benchmark
 harness uses. ``mode='gather'`` stores only |W_i| weights (the storage the
-hardware sees, Table I).
+hardware sees, Table I). ``mode='block_gather'``/``'block_scatter'`` lift the
+pattern to MXU-tile granularity and run forward AND backward through the one
+accelerated junction primitive ``kernels.ops.csd_matmul``, with the hidden
+ReLU fused into the kernel epilogue (the accelerated-training configuration
+of §III).
 """
 from __future__ import annotations
 
@@ -35,7 +39,9 @@ class MLPConfig:
     cf_type: int = 1
     dither: bool = False
     z: Optional[Tuple[int, ...]] = None  # degree-of-parallelism per junction
-    mode: str = "mask"                 # mask | gather
+    mode: str = "mask"     # mask | gather | block_gather | block_scatter
+    block: int = 16        # tile size cap for the block modes (shrunk per
+    #                        junction until it divides both dims)
     bias_init: float = 0.1
     seed: int = 0
 
@@ -58,11 +64,17 @@ class SparseMLP:
             mode = cfg.mode if rho < 1.0 else "dense"
             if cfg.method == "random" and rho < 1.0:
                 mode = "mask"  # random patterns have no fixed degrees
+            n_in, n_out = cfg.n_net[i], cfg.n_net[i + 1]
+            bi = bo = cfg.block
+            while n_in % bi:
+                bi //= 2
+            while n_out % bo:
+                bo //= 2
             spec = SparseLinearSpec(
-                n_in=cfg.n_net[i], n_out=cfg.n_net[i + 1], rho=rho,
+                n_in=n_in, n_out=n_out, rho=rho,
                 mode=mode, method=cfg.method, cf_type=cfg.cf_type,
                 dither=cfg.dither, seed=cfg.seed * 1000 + i,
-                use_bias=True)
+                block_in=bi, block_out=bo, use_bias=True)
             self.layers.append(SparseLinear(spec))
 
     # -- parameters -----------------------------------------------------------
@@ -79,8 +91,7 @@ class SparseMLP:
 
     def n_weights(self) -> int:
         """|W| summed over junctions (paper's complexity measure)."""
-        return sum(l.pattern.n_edges if l.pattern is not None
-                   else l.spec.n_in * l.spec.n_out for l in self.layers)
+        return sum(l.n_weights for l in self.layers)
 
     def density(self) -> float:
         num = self.n_weights()
@@ -91,10 +102,13 @@ class SparseMLP:
 
     def logits(self, params: dict, x: jax.Array) -> jax.Array:
         h = x
+        last = len(self.layers) - 1
         for i, layer in enumerate(self.layers):
-            h = layer(params[f"j{i}"], h)
-            if i < len(self.layers) - 1:
-                h = jax.nn.relu(h)
+            # hidden ReLU fused into the junction (kernel epilogue for the
+            # block modes); the output junction stays linear (softmax'd in
+            # the loss)
+            h = layer(params[f"j{i}"], h,
+                      activation="relu" if i < last else None)
         return h
 
     def loss(self, params: dict, x: jax.Array, y: jax.Array,

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..nn.common import mesh_context
 from ..optim import adam
 from ..optim.compression import psum_compressed_tree
@@ -178,7 +179,7 @@ class Trainer:
         else:
             mesh = self.mesh
             spec = jax.tree.map(lambda _: P(), params)
-            fn = jax.shard_map(
+            fn = shard_map(
                 inner, mesh=mesh,
                 in_specs=(spec, spec, spec, spec),
                 out_specs=(spec, spec, spec, spec), check_vma=False)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degraded-mode property testing (see the fallback doc)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.ref import mha_ref
 from repro.nn.attention import chunked_attention, decode_attention

@@ -3,7 +3,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degraded-mode property testing (see the fallback doc)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (
     JunctionSpec, clashfree_pattern, clashfree_schedule,
