@@ -27,7 +27,8 @@ def config() -> ModelConfig:
         act="silu",
         ffn_gated=True,
         tie_embeddings=False,
-        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75)),
+        sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
+                                moe_sparsity=True),
     )
 
 
@@ -40,5 +41,6 @@ def smoke_config() -> ModelConfig:
                       dense_d_ff=128),
         attn_chunk=16, loss_chunk=16, dtype="float32",
         sparsity=SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75),
-                                block_in=16, block_out=16),
+                                block_in=16, block_out=16,
+                                moe_sparsity=True),
     )

@@ -29,7 +29,9 @@ from .sparsity import (  # noqa: F401
     transpose_pattern,
     count_access_patterns,
 )
-from .block_pattern import BlockPattern, make_block_pattern  # noqa: F401
+from .block_pattern import (  # noqa: F401
+    BlockPattern, fit_block_pattern, make_block_pattern,
+)
 from .sparse_linear import (  # noqa: F401
     SparseLinear,
     SparseLinearSpec,

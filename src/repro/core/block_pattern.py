@@ -122,3 +122,42 @@ def make_block_pattern(
         out_slot=ridx[:, :, 1].astype(np.int32),
         meta=dict(pat.meta, method=pat.method, seed=seed),
     )
+
+
+def shrink_to_divisor(dim: int, block: int) -> int:
+    """Largest power-of-two shrink of ``block`` (capped at ``dim``) that
+    divides ``dim`` — the one block-size adaptation rule, shared by every
+    junction-instantiating layer (``fit_block_pattern``, ``SparseMLP``)."""
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return b
+
+
+def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
+                      seed: int = 0) -> Optional[BlockPattern]:
+    """Adapt a ``SparsityConfig``'s block sizes to one junction, or return
+    ``None`` if the junction should stay dense.
+
+    ``sp`` is duck-typed (any object with the SparsityConfig fields) so the
+    core layer needs no import from ``nn``. Policy — shared by every layer
+    that instantiates junctions (``nn.layers.Linear``, ``nn.ffn.MoE``):
+
+    * disabled sparsity or ``rho >= 1`` -> dense (``None``);
+    * block sizes shrink by powers of two until they divide the junction
+      dims;
+    * hardware-divisibility guard (the block analogue of the paper's
+      Appendix-B "z must divide N" constraint): junctions whose dims only
+      admit micro blocks (< 32 wide, e.g. mamba's packed in_proj of width
+      3352) waste the MXU and blow up the XLA dataflow — they stay dense.
+    """
+    if sp is None or not sp.enabled or rho >= 1.0:
+        return None
+    bi = shrink_to_divisor(n_in, sp.block_in)
+    bo = shrink_to_divisor(n_out, sp.block_out)
+    min_b = min(32, sp.block_in, sp.block_out)
+    if bi < min_b or bo < min_b:
+        return None
+    return make_block_pattern(
+        n_in, n_out, rho, block_in=bi, block_out=bo, method=sp.method,
+        seed=sp.seed + seed, cf_type=sp.cf_type, dither=sp.dither)

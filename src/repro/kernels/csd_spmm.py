@@ -26,6 +26,17 @@ Weight layout: ``w[n_rb, d_in_b, bL, bR]`` — right-block major, exactly the
 paper's edge numbering (§III-B: "edges are numbered sequentially ... on the
 right side of the junction").
 
+Batched (expert-major) junctions: every kernel also accepts a stacked
+weight slab ``w[E, n_rb, d_in_b, bL, bR]`` with activations
+``x[E, M, n_in]`` — the layout of MoE expert FFNs, where ``E`` experts
+share one junction *pattern* but own private weights. The expert index
+becomes the *leading* (outermost, slowest-varying) grid dimension, so one
+``BlockPattern`` is scalar-prefetched once and serves every expert — the
+paper's "not tied to a specific number of neurons" architecture replicated
+per expert with zero extra pattern memory. Inner grid order (row tile,
+right block, fan-in slot) is unchanged, so the per-expert schedule, VMEM
+residency, and clash-freedom argument are identical to the unbatched case.
+
 All kernels are validated against ``ref.py`` in interpret mode (CPU) by
 ``tests/test_kernels.py``; on real TPUs the same code path compiles to
 Mosaic.
@@ -105,6 +116,90 @@ def _fwd_kernel(idx_ref, *refs, d_in_b: int, activation: Optional[str],
             y_ref[...] = apply_activation(z, activation)
 
 
+def _fwd_kernel_batched(idx_ref, *refs, d_in_b: int,
+                        activation: Optional[str], has_bias: bool,
+                        save_preact: bool):
+    """Expert-major forward: same schedule as ``_fwd_kernel`` shifted one
+    grid dim right; refs carry a leading expert-singleton block dim."""
+    if has_bias:
+        x_ref, w_ref, b_ref = refs[:3]
+        out_refs = refs[3:]
+    else:
+        x_ref, w_ref = refs[:2]
+        b_ref = None
+        out_refs = refs[2:]
+    y_ref = out_refs[0]
+    f = pl.program_id(3)
+
+    @pl.when(f == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[0]  # (block_m, bL)
+    w = w_ref[0, 0, 0]  # (bL, bR)
+    y_ref[0] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=y_ref.dtype)
+
+    if has_bias or activation is not None or save_preact:
+        @pl.when(f == d_in_b - 1)
+        def _epilogue():
+            z = y_ref[0]
+            if has_bias:
+                z = z + b_ref[0].astype(z.dtype)  # (1, bR) broadcasts
+            if save_preact:
+                out_refs[1][0] = z
+            y_ref[0] = apply_activation(z, activation)
+
+
+def _csd_spmm_fwd_batched(x, w, block_idx, *, bias, activation, save_preact,
+                          block_m, interpret):
+    """Expert-batched forward: x (E, M, n_in), w (E, n_rb, d_in_b, bL, bR),
+    one shared pattern prefetched once; grid (E, M/bm, n_rb, d_in_b)."""
+    e, m, n_in = x.shape
+    _, n_rb, d_in_b, bl, br = w.shape
+    if n_in % bl:
+        raise ValueError("n_in not divisible by block_in")
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float32) else x.dtype
+
+    has_bias = bias is not None
+    grid = (e, m // block_m, n_rb, d_in_b)
+    kernel = functools.partial(_fwd_kernel_batched, d_in_b=d_in_b,
+                               activation=activation, has_bias=has_bias,
+                               save_preact=save_preact)
+    in_specs = [
+        pl.BlockSpec((1, block_m, bl),
+                     lambda e, i, r, f, idx: (e, i, idx[r, f])),
+        pl.BlockSpec((1, 1, 1, bl, br),
+                     lambda e, i, r, f, idx: (e, r, f, 0, 0)),
+    ]
+    operands = [jnp.asarray(block_idx, jnp.int32), x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, 1, br),
+                                     lambda e, i, r, f, idx: (e, r, 0)))
+        operands.append(bias.reshape(e, n_rb, br))
+    out_spec = pl.BlockSpec((1, block_m, br),
+                            lambda e, i, r, f, idx: (e, i, r))
+    out_shape = jax.ShapeDtypeStruct((e, m, n_rb * br), acc_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(out_spec, out_spec) if save_preact else out_spec,
+        ),
+        out_shape=(out_shape, out_shape) if save_preact else out_shape,
+        interpret=interpret,
+    )(*operands)
+    if save_preact:
+        y, z = out
+        return y.astype(x.dtype), z.astype(x.dtype)
+    return out.astype(x.dtype)
+
+
 def csd_spmm_fwd(
     x: jax.Array,
     w: jax.Array,
@@ -122,18 +217,26 @@ def csd_spmm_fwd(
     block_idx: (n_rb, d_in_b) int32; bias: (n_rb*bR,) or None ->
     y: (M, n_rb*bR) = activation(x @ W_sparse + bias).
 
+    Batched (expert-major) form: w (E, n_rb, d_in_b, bL, bR) with
+    x (E, M, n_in) and bias (E, n_rb*bR) -> y (E, M, n_rb*bR); the expert
+    index is the leading grid dimension and the pattern is shared.
+
     ``save_preact=True`` additionally returns the pre-activation
     ``z = x @ W_sparse + bias`` (needed by the backward pass of non-masking
     activations like gelu); the return value is then ``(y, z)``.
     """
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation {activation!r}")
+    if w.ndim == 5:
+        return _csd_spmm_fwd_batched(
+            x, w, block_idx, bias=bias, activation=activation,
+            save_preact=save_preact, block_m=block_m, interpret=interpret)
     m, n_in = x.shape
     n_rb, d_in_b, bl, br = w.shape
     if n_in % bl:
         raise ValueError("n_in not divisible by block_in")
     if m % block_m:
         raise ValueError(f"M={m} not divisible by block_m={block_m}")
-    if activation is not None and activation not in ACTIVATIONS:
-        raise ValueError(f"unsupported fused activation {activation!r}")
     acc_dtype = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float32) else x.dtype
 
     has_bias = bias is not None
@@ -200,6 +303,53 @@ def _dx_kernel(oidx_ref, oslot_ref, dy_ref, w_ref, dx_ref):
         preferred_element_type=dx_ref.dtype)
 
 
+def _dx_kernel_batched(oidx_ref, oslot_ref, dy_ref, w_ref, dx_ref):
+    g = pl.program_id(3)
+
+    @pl.when(g == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dy = dy_ref[0]  # (block_m, bR)
+    w = w_ref[0, 0, 0]  # (bL, bR)
+    dx_ref[0] += jax.lax.dot_general(
+        dy, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=dx_ref.dtype)
+
+
+def _csd_spmm_dx_batched(dy, w, out_idx, out_slot, *, block_m, interpret):
+    e, m, _ = dy.shape
+    _, n_rb, d_in_b, bl, br = w.shape
+    n_lb, d_out_b = out_idx.shape
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    acc_dtype = jnp.float32 if dy.dtype in (jnp.bfloat16, jnp.float32) else dy.dtype
+
+    grid = (e, m // block_m, n_lb, d_out_b)
+    dx = pl.pallas_call(
+        _dx_kernel_batched,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_m, br),
+                             lambda e, i, l, g, oidx, oslot:
+                             (e, i, oidx[l, g])),
+                pl.BlockSpec((1, 1, 1, bl, br),
+                             lambda e, i, l, g, oidx, oslot:
+                             (e, oidx[l, g], oslot[l, g], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_m, bl),
+                                   lambda e, i, l, g, oidx, oslot:
+                                   (e, i, l)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, m, n_lb * bl), acc_dtype),
+        interpret=interpret,
+    )(jnp.asarray(out_idx, jnp.int32), jnp.asarray(out_slot, jnp.int32),
+      dy, w)
+    return dx.astype(dy.dtype)
+
+
 def csd_spmm_dx(
     dy: jax.Array,
     w: jax.Array,
@@ -210,7 +360,11 @@ def csd_spmm_dx(
     interpret: bool = False,
 ) -> jax.Array:
     """dx: (M, n_in). dy: (M, n_rb*bR); the scatter pattern arrays come from
-    ``BlockPattern.out_idx/out_slot`` (reverse adjacency)."""
+    ``BlockPattern.out_idx/out_slot`` (reverse adjacency). Batched form:
+    dy (E, M, n_rb*bR), w (E, n_rb, d_in_b, bL, bR) -> dx (E, M, n_in)."""
+    if w.ndim == 5:
+        return _csd_spmm_dx_batched(dy, w, out_idx, out_slot,
+                                    block_m=block_m, interpret=interpret)
     m, _ = dy.shape
     n_rb, d_in_b, bl, br = w.shape
     n_lb, d_out_b = out_idx.shape
@@ -261,6 +415,50 @@ def _dw_kernel(idx_ref, x_ref, dy_ref, dw_ref):
         preferred_element_type=dw_ref.dtype)
 
 
+def _dw_kernel_batched(idx_ref, x_ref, dy_ref, dw_ref):
+    i = pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    x = x_ref[0]  # (block_m, bL)
+    dy = dy_ref[0]  # (block_m, bR)
+    dw_ref[0, 0, 0] += jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=dw_ref.dtype)
+
+
+def _csd_spmm_dw_batched(x, dy, block_idx, *, block_in, block_out, block_m,
+                         interpret):
+    e, m, n_in = x.shape
+    n_rb, d_in_b = block_idx.shape
+    bl, br = block_in, block_out
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+
+    grid = (e, n_rb, d_in_b, m // block_m)
+    dw = pl.pallas_call(
+        _dw_kernel_batched,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_m, bl),
+                             lambda e, r, f, i, idx: (e, i, idx[r, f])),
+                pl.BlockSpec((1, block_m, br),
+                             lambda e, r, f, i, idx: (e, i, r)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, bl, br),
+                                   lambda e, r, f, i, idx: (e, r, f, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, n_rb, d_in_b, bl, br),
+                                       jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_idx, jnp.int32), x, dy)
+    return dw.astype(x.dtype)
+
+
 def csd_spmm_dw(
     x: jax.Array,
     dy: jax.Array,
@@ -271,7 +469,19 @@ def csd_spmm_dw(
     block_m: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """dw: (n_rb, d_in_b, bL, bR), batch-accumulated (innermost grid dim)."""
+    """dw: (n_rb, d_in_b, bL, bR), batch-accumulated (innermost grid dim).
+    Batched (expert-major) form: x (E, M, n_in), dy (E, M, n_out) ->
+    dw (E, n_rb, d_in_b, bL, bR); per-expert accumulation over M only —
+    any 3-D input IS interpreted as expert-batched (fwd/dx dispatch on the
+    unambiguous w.ndim; dw has no w, so the rank of x decides)."""
+    if x.ndim != dy.ndim or x.ndim not in (2, 3):
+        raise ValueError(
+            f"x/dy must both be 2-D (unbatched) or 3-D (expert-batched), "
+            f"got {x.shape} / {dy.shape}")
+    if x.ndim == 3:
+        return _csd_spmm_dw_batched(x, dy, block_idx, block_in=block_in,
+                                    block_out=block_out, block_m=block_m,
+                                    interpret=interpret)
     m, n_in = x.shape
     n_rb, d_in_b = block_idx.shape
     bl, br = block_in, block_out

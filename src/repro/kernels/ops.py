@@ -36,6 +36,28 @@ layout, the paper's single weight memory bank. The fused epilogue's
 gradient is handled by masking the incoming cotangent (relu: sign of the
 saved output; gelu: derivative at the saved pre-activation) before it
 enters BP/UP.
+
+Batched (expert-major) junctions — the MoE layout
+-------------------------------------------------
+Passing ``w`` with a leading expert dimension, ``(E, n_rb, d_in_b, bL,
+bR)``, selects the batched junction path: ``x`` is ``(E, ..., n_in)``
+(one activation slab per expert), ``bias`` is ``(E, n_out)``, and the
+result is ``(E, ..., n_out)``. All ``E`` experts share ONE compile-time
+``BlockPattern``:
+
+* Pallas — the expert index is the leading (outermost) grid dimension of
+  the same FF/BP/UP kernels; the pattern is scalar-prefetched once and
+  re-read per expert, so pattern memory does not scale with ``E``;
+* XLA fallback — the slot-wise gather/scatter sweeps are ``jax.vmap``-ed
+  over the expert dim, keeping the one-output-intermediate peak per
+  expert. The fallback is selected exactly as in the unbatched case:
+  ``backend="auto"`` resolves to Pallas on TPU and XLA everywhere else
+  (and is what GSPMD partitions inside the MoE ``shard_map``).
+
+The batched custom VJP routes expert junctions through the same three
+operations, so a stack of expert FFNs trains exactly like the paper's
+single junction — this is what ``nn.ffn.MoE`` runs when
+``SparsityConfig.moe_sparsity`` is enabled.
 """
 from __future__ import annotations
 
@@ -208,9 +230,32 @@ def _xla_dw(x, dy, pat):
 
 
 # ---------------------------------------------------------------------------
+# Batched (expert-major) XLA fallbacks: the slot sweeps vmapped over the
+# leading expert dim of x and w. The pattern is closed over (shared by all
+# experts), so only the weight slab and activations are mapped — the
+# per-expert peak memory is identical to the unbatched sweep.
+# ---------------------------------------------------------------------------
+
+
+def _xla_fwd_batched(x, w, pat, dataflow):
+    fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
+    return jax.vmap(lambda xe, we: fwd(xe, we, pat))(x, w)
+
+
+def _xla_dx_batched(dy, w, pat):
+    return jax.vmap(lambda de, we: _xla_dx(de, we, pat))(dy, w)
+
+
+def _xla_dw_batched(x, dy, pat):
+    return jax.vmap(lambda xe, de: _xla_dw(xe, de, pat))(x, dy)
+
+
+# ---------------------------------------------------------------------------
 # Differentiable core. Signature: (x, w, b) differentiable; everything else
 # static. ``b`` is a zero-length placeholder when has_bias is False so the
-# custom_vjp arity stays fixed.
+# custom_vjp arity stays fixed. Batched-ness is a shape property
+# (w.ndim == 5), not an extra static flag — both layouts trace through the
+# same custom_vjp.
 # ---------------------------------------------------------------------------
 
 
@@ -220,6 +265,7 @@ def _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
     caller is the VJP forward and the backward needs it (gelu), else None
     (relu recovers its mask from y; the primal never pays for the extra
     kernel output)."""
+    batched = w.ndim == 5
     if backend == "pallas":
         bias = b if has_bias else None
         if activation == "gelu" and want_preact:
@@ -230,10 +276,16 @@ def _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
             x, w, pat.block_idx, bias=bias, activation=activation,
             block_m=block_m, interpret=interpret)
         return y, None
-    fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
-    z = fwd(x, w, pat)
+    if batched:
+        z = _xla_fwd_batched(x, w, pat, dataflow)
+    else:
+        fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
+        z = fwd(x, w, pat)
     if has_bias:
-        z = z + b.astype(z.dtype)
+        bb = b
+        if batched:  # (E, n_out) broadcast over the per-expert leading dims
+            bb = b.reshape((b.shape[0],) + (1,) * (z.ndim - 2) + b.shape[1:])
+        z = z + bb.astype(z.dtype)
     y = csd_spmm.apply_activation(z, activation)
     return y, (z if activation == "gelu" else None)
 
@@ -274,9 +326,11 @@ def _bwd_vjp(pat, has_bias, activation, backend, dataflow, block_m,
             lambda z: jax.nn.gelu(z, approximate=True),
             aux.astype(jnp.float32))
         dy = act_vjp(dy.astype(jnp.float32))[0].astype(dy.dtype)
+    batched = w.ndim == 5
     if has_bias:
-        db = jnp.sum(dy.astype(jnp.float32),
-                     axis=tuple(range(dy.ndim - 1))).astype(b.dtype)
+        # batched: keep the per-expert leading dim — db is (E, n_out)
+        axes = tuple(range(1 if batched else 0, dy.ndim - 1))
+        db = jnp.sum(dy.astype(jnp.float32), axis=axes).astype(b.dtype)
     else:
         db = jnp.zeros((0,), b.dtype)
     if backend == "pallas":
@@ -286,6 +340,9 @@ def _bwd_vjp(pat, has_bias, activation, backend, dataflow, block_m,
                                   block_in=pat.block_in,
                                   block_out=pat.block_out,
                                   block_m=block_m, interpret=interpret)
+    elif batched:
+        dx = _xla_dx_batched(dy, w, pat)
+        dw = _xla_dw_batched(x, dy, pat)
     else:
         dx = _xla_dx(dy, w, pat)
         dw = _xla_dw(x, dy, pat)
@@ -311,33 +368,45 @@ def csd_matmul(
     computing ``activation(x @ W_sparse + bias)`` with the epilogue fused
     into the matmul (see module docstring).
 
+    Batched (expert-major) form: ``w`` of shape ``(E, n_rb, d_in_b, bL,
+    bR)`` with ``x`` ``(E, ..., n_in)`` and ``bias`` ``(E, n_out)`` runs
+    all ``E`` expert junctions over one shared pattern and returns
+    ``(E, ..., n_out)`` (see module docstring).
+
     ``activation`` is ``None | "relu" | "gelu"`` (gelu = tanh approximation,
     matching the model stack's activation registry). Leading dims are
-    flattened to M and padded to ``block_m`` for the Pallas path; the XLA
-    path keeps leading dims intact so GSPMD preserves their sharding. The
-    pattern is compile-time static.
+    flattened to M (per expert in the batched form) and padded to
+    ``block_m`` for the Pallas path; the XLA path keeps leading dims intact
+    so GSPMD preserves their sharding. The pattern is compile-time static.
     """
     if activation is not None and activation not in csd_spmm.ACTIVATIONS:
         raise ValueError(f"unsupported fused activation {activation!r}")
     if dataflow not in ("gather", "scatter"):
         raise ValueError(f"unknown dataflow {dataflow!r}")
+    batched = w.ndim == 5
+    if batched and (x.ndim < 2 or x.shape[0] != w.shape[0]):
+        raise ValueError(
+            f"batched junction: x leading dim {x.shape} must match expert "
+            f"count E={w.shape[0]}")
     backend = _resolve(backend)
     pat = _Pat(pattern)
     has_bias = bias is not None
     b = bias if has_bias else jnp.zeros((0,), x.dtype)
     if backend == "pallas":
-        lead = x.shape[:-1]
         n_in = x.shape[-1]
-        xf = x.reshape(-1, n_in)
-        m = xf.shape[0]
+        # after this reshape the M axis is -2 in both layouts (batched
+        # keeps E as axis 0), so pad/slice/unflatten share one form
+        xf = x.reshape(((x.shape[0],) if batched else ()) + (-1, n_in))
+        m = xf.shape[-2]
         pad = (-m) % block_m
         if pad:
-            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+            widths = [(0, 0)] * (xf.ndim - 2) + [(0, pad), (0, 0)]
+            xf = jnp.pad(xf, widths)
         y = _csd_matmul(xf, w, b, pat, has_bias, activation, backend,
                         dataflow, block_m, interpret)
         if pad:
-            y = y[:m]
-        return y.reshape(lead + (y.shape[-1],))
+            y = y[..., :m, :]
+        return y.reshape(x.shape[:-1] + (y.shape[-1],))
     # xla: leading dims flow through untouched (sharding preserved)
     return _csd_matmul(x, w, b, pat, has_bias, activation, backend,
                        dataflow, block_m, interpret)

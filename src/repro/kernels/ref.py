@@ -65,6 +65,43 @@ def block_scatter_ref(x: jax.Array, w: jax.Array, out_idx: np.ndarray,
     return y.reshape(lead + (n_rb * br,))
 
 
+def csd_spmm_fwd_batched_ref(x: jax.Array, w: jax.Array,
+                             block_idx: np.ndarray) -> jax.Array:
+    """Expert-batched forward oracle: x (E, M, n_in),
+    w (E, n_rb, d_in_b, bL, bR), one pattern shared by all experts."""
+    return jax.vmap(lambda xe, we: csd_spmm_fwd_ref(xe, we, block_idx))(x, w)
+
+
+def csd_spmm_dx_batched_ref(dy: jax.Array, w: jax.Array, out_idx: np.ndarray,
+                            out_slot: np.ndarray) -> jax.Array:
+    return jax.vmap(
+        lambda de, we: csd_spmm_dx_ref(de, we, out_idx, out_slot))(dy, w)
+
+
+def csd_spmm_dw_batched_ref(x: jax.Array, dy: jax.Array,
+                            block_idx: np.ndarray, block_in: int,
+                            block_out: int) -> jax.Array:
+    return jax.vmap(
+        lambda xe, de: csd_spmm_dw_ref(xe, de, block_idx, block_in,
+                                       block_out))(x, dy)
+
+
+def moe_expert_ffn_ref(xe: jax.Array, up: jax.Array, gate: jax.Array,
+                       down: jax.Array, act) -> jax.Array:
+    """Dense stacked expert FFN oracle: xe (E, C, d), up/gate (E, d, d_e),
+    down (E, d_e, d).
+
+    Formerly ``nn.ffn.MoE._expert_ffn`` — demoted here when the expert
+    junctions unified on the batched ``ops.csd_matmul`` path; kept as the
+    ground truth for the MoE cross-mode equivalence tests.
+    """
+    cdt = xe.dtype
+    h = jnp.einsum("ecd,edf->ecf", xe, up.astype(cdt))
+    g = jnp.einsum("ecd,edf->ecf", xe, gate.astype(cdt))
+    h = act(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, down.astype(cdt))
+
+
 def csd_spmm_dx_ref(dy: jax.Array, w: jax.Array, out_idx: np.ndarray,
                     out_slot: np.ndarray) -> jax.Array:
     n_rb, d_in_b, bl, br = w.shape

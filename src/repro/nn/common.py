@@ -76,6 +76,12 @@ class SparsityConfig:
     enabled: bool = False
     rho_ffn: Tuple[float, float] = (0.5, 0.75)
     rho_attn: Optional[float] = None  # None = attention projections dense
+    # MoE expert junctions (up/gate/down of every routed expert) become
+    # pre-defined block-sparse too, executed through the batched
+    # (expert-major) csd_matmul path with one pattern shared across
+    # experts. Densities follow rho_ffn. Off by default: expert matmuls
+    # keep the dense stacked-einsum form unless opted in.
+    moe_sparsity: bool = False
     method: str = "clashfree"
     cf_type: int = 1
     dither: bool = False

@@ -21,6 +21,15 @@ MoE has two interchangeable implementations:
                  the collective roofline term).
 
 Both are differentiable and agree numerically (tests/test_moe.py).
+
+Expert junctions can be pre-defined sparse too
+(``SparsityConfig.moe_sparsity``): each expert's up/gate/down weight
+becomes a stacked block-sparse slab ``(E, n_rb, d_in_b, bL, bR)`` over ONE
+shared ``BlockPattern`` per junction, and ``_expert_ffn`` — the expert
+compute of BOTH dispatch modes — executes through the batched
+``kernels.ops.csd_matmul`` path (expert-major Pallas grid on TPU, vmapped
+slot-sweeps on XLA). The dense stacked einsums live on as the oracle
+``kernels.ref.moe_expert_ffn_ref``.
 """
 from __future__ import annotations
 
@@ -33,8 +42,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import shard_map
+from ..core.block_pattern import fit_block_pattern
+from ..kernels import ops as kops
 from .common import ModelConfig, MoEConfig, current_mesh, shard
 from .layers import Linear, activation
+
+# activation names the fused csd_matmul epilogue understands (the registry
+# binds gelu and gelu_tanh to the same tanh-approx function); shared by the
+# dense-FFN and MoE expert junction paths.
+_FUSABLE = {"relu": "relu", "gelu": "gelu", "gelu_tanh": "gelu"}
 
 
 class FFN:
@@ -71,12 +87,8 @@ class FFN:
             s["gate"] = self.gate.spec()
         return s
 
-    # activation names the fused csd_matmul epilogue understands (the
-    # registry binds gelu and gelu_tanh to the same tanh-approx function)
-    _FUSABLE = {"relu": "relu", "gelu": "gelu", "gelu_tanh": "gelu"}
-
     def __call__(self, params: dict, x: jax.Array) -> jax.Array:
-        fused = self._FUSABLE.get(self.cfg.act)
+        fused = _FUSABLE.get(self.cfg.act)
         if self.gate is not None:
             h = self.up(params["up"], x)
             # the activation fuses into the *gate* junction's epilogue
@@ -112,13 +124,38 @@ class MoE:
         pd = cfg.param_dtype
         self.pd = jnp.dtype(pd)
         self.seed = seed
+        # Pre-defined sparse expert junctions: one pattern per junction
+        # family, shared by every expert (the batched csd_matmul layout).
+        sp = cfg.sparsity
+        self.backend = sp.backend
+        self.up_pat = self.gate_pat = self.down_pat = None
+        if sp.enabled and sp.moe_sparsity:
+            rho_up, rho_down = sp.rho_ffn
+            self.up_pat = fit_block_pattern(self.d, self.d_e, rho_up, sp,
+                                            seed=seed + 31)
+            self.gate_pat = fit_block_pattern(self.d, self.d_e, rho_up, sp,
+                                              seed=seed + 32)
+            self.down_pat = fit_block_pattern(self.d_e, self.d, rho_down,
+                                              sp, seed=seed + 33)
         if self.mc.n_shared:
             self.shared = FFN(cfg, d_ff=self.mc.n_shared * self.d_e,
                               seed=seed + 29)
         else:
             self.shared = None
 
-    # expert weights are stored stacked: (E, d, d_e) / (E, d_e, d)
+    def _expert_w(self, key, pat, n_in, n_out, E):
+        """One stacked expert weight: block-sparse slab when the junction
+        has a pattern, dense (E, n_in, n_out) otherwise."""
+        if pat is not None:
+            fan_in = pat.d_in_b * pat.block_in
+            return jax.random.normal(
+                key, (E, pat.n_rb, pat.d_in_b, pat.block_in, pat.block_out),
+                self.pd) * np.sqrt(1.0 / fan_in)
+        return jax.random.normal(key, (E, n_in, n_out), self.pd) \
+            * np.sqrt(1.0 / n_in)
+
+    # expert weights are stored stacked: (E, d, d_e) / (E, d_e, d) dense,
+    # (E, n_rb, d_in_b, bL, bR) when the junction is pre-defined sparse
     def init(self, key: jax.Array) -> dict:
         mc, d, d_e = self.mc, self.d, self.d_e
         ks = jax.random.split(key, 5)
@@ -126,22 +163,24 @@ class MoE:
         p = {
             "router": jax.random.normal(ks[0], (d, E), self.pd)
             * np.sqrt(1.0 / d),
-            "up": jax.random.normal(ks[1], (E, d, d_e), self.pd)
-            * np.sqrt(1.0 / d),
-            "gate": jax.random.normal(ks[2], (E, d, d_e), self.pd)
-            * np.sqrt(1.0 / d),
-            "down": jax.random.normal(ks[3], (E, d_e, d), self.pd)
-            * np.sqrt(1.0 / d_e),
+            "up": self._expert_w(ks[1], self.up_pat, d, d_e, E),
+            "gate": self._expert_w(ks[2], self.gate_pat, d, d_e, E),
+            "down": self._expert_w(ks[3], self.down_pat, d_e, d, E),
         }
         if self.shared is not None:
             p["shared"] = self.shared.init(ks[4])
         return p
 
     def spec(self) -> dict:
+        def wspec(pat, dense_axes):
+            # sparse slab (E, n_rb, d_in_b, bL, bR): shard the expert dim,
+            # replicate the (tiny) per-expert pattern dims
+            return ("expert", None, None, None, None) if pat is not None \
+                else dense_axes
         s = {"router": (None, None),
-             "up": ("expert", "embed", None),
-             "gate": ("expert", "embed", None),
-             "down": ("expert", None, "embed")}
+             "up": wspec(self.up_pat, ("expert", "embed", None)),
+             "gate": wspec(self.gate_pat, ("expert", "embed", None)),
+             "down": wspec(self.down_pat, ("expert", None, "embed"))}
         if self.shared is not None:
             s["shared"] = self.shared.spec()
         return s
@@ -171,13 +210,30 @@ class MoE:
         aux = {"moe_lb": lb_loss, "moe_z": mc.router_zloss * z_loss}
         return gates, ids, aux
 
-    def _expert_ffn(self, up, gate, down, xe):
-        """xe: (E_loc, C, d) -> (E_loc, C, d), batched over experts."""
+    def _junction(self, xe, w, pat, activation=None):
+        """One stacked expert junction: batched csd_matmul when pre-defined
+        sparse, stacked einsum (the kernels.ref oracle form) when dense."""
         cdt = xe.dtype
-        h = jnp.einsum("ecd,edf->ecf", xe, up.astype(cdt))
-        g = jnp.einsum("ecd,edf->ecf", xe, gate.astype(cdt))
-        h = self.act(g) * h
-        return jnp.einsum("ecf,efd->ecd", h, down.astype(cdt))
+        if pat is not None:
+            return kops.csd_matmul(xe, w.astype(cdt), pat,
+                                   activation=activation,
+                                   backend=self.backend)
+        y = jnp.einsum("ecd,edf->ecf", xe, w.astype(cdt))
+        return kops.apply_activation(y, activation)
+
+    def _expert_ffn(self, up, gate, down, xe):
+        """xe: (E_loc, C, d) -> (E_loc, C, d), batched over experts — the
+        expert compute of BOTH dispatch modes (gshard-style local and
+        shard_map expert-parallel). Each junction routes through the
+        batched block-sparse csd_matmul path when it carries a pattern;
+        a fusable activation rides the gate junction's epilogue."""
+        fused = _FUSABLE.get(self.cfg.act) if self.gate_pat is not None \
+            else None
+        h = self._junction(xe, up, self.up_pat)
+        g = self._junction(xe, gate, self.gate_pat, activation=fused)
+        if fused is None:
+            g = self.act(g)
+        return self._junction(g * h, down, self.down_pat)
 
     # -- local (single-shard) sort-based dispatch ----------------------------
 
@@ -227,7 +283,11 @@ class MoE:
         E, k = mc.n_routed, mc.top_k
         e_loc = E // n_ep
         x_spec = logical_to_spec("batch", "seq", None)
-        w_spec = P(ep_axis, None, None)
+
+        def w_spec(pat):
+            # expert dim sharded over ep_axis; dense (E, n, n) weights have
+            # 2 trailing dims, sparse slabs (E, n_rb, d_in_b, bL, bR) have 4
+            return P(ep_axis, *([None] * (2 if pat is None else 4)))
         r_spec = P(None, None)
         all_axes = tuple(mesh.axis_names)
 
@@ -257,7 +317,8 @@ class MoE:
 
         fn = shard_map(
             local_fn, mesh=mesh,
-            in_specs=(r_spec, w_spec, w_spec, w_spec, x_spec),
+            in_specs=(r_spec, w_spec(self.up_pat), w_spec(self.gate_pat),
+                      w_spec(self.down_pat), x_spec),
             out_specs=(x_spec, {n: P() for n in ("moe_lb", "moe_z")}),
             check_vma=False)
         return fn(params["router"], params["up"], params["gate"],

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.block_pattern import BlockPattern, make_block_pattern
+from ..core.block_pattern import BlockPattern, fit_block_pattern
 from ..kernels import ops as kops
 from .common import ModelConfig, SparsityConfig, shard
 
@@ -41,25 +41,11 @@ class Linear:
         self.name = name
         self.pattern: Optional[BlockPattern] = None
         self.backend = "xla"
-        if sp is not None and sp.enabled and rho < 1.0:
-            bi = min(sp.block_in, n_in)
-            bo = min(sp.block_out, n_out)
-            # block sizes must divide the junction dims
-            while n_in % bi:
-                bi //= 2
-            while n_out % bo:
-                bo //= 2
-            # hardware-divisibility guard (the block analogue of the paper's
-            # Appendix-B "z must divide N" constraint): micro blocks waste
-            # the MXU and blow up the XLA dataflow — junctions whose dims
-            # only admit <32-wide blocks (e.g. mamba's packed in_proj of
-            # width 3352) stay dense.
-            min_b = min(32, sp.block_in, sp.block_out)
-            if bi >= min_b and bo >= min_b:
-                self.pattern = make_block_pattern(
-                    n_in, n_out, rho, block_in=bi, block_out=bo,
-                    method=sp.method, seed=sp.seed + seed,
-                    cf_type=sp.cf_type, dither=sp.dither)
+        if sp is not None:
+            # fit_block_pattern applies the shared block-size adaptation +
+            # micro-block guard; None -> this junction stays dense.
+            self.pattern = fit_block_pattern(n_in, n_out, rho, sp, seed=seed)
+            if self.pattern is not None:
                 self.backend = sp.backend
 
     @property

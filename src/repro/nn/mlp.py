@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import sparsity
+from ..core.block_pattern import shrink_to_divisor
 from ..core.sparse_linear import SparseLinear, SparseLinearSpec
 
 
@@ -65,11 +66,9 @@ class SparseMLP:
             if cfg.method == "random" and rho < 1.0:
                 mode = "mask"  # random patterns have no fixed degrees
             n_in, n_out = cfg.n_net[i], cfg.n_net[i + 1]
-            bi = bo = cfg.block
-            while n_in % bi:
-                bi //= 2
-            while n_out % bo:
-                bo //= 2
+            # no micro-block guard here: paper-scale MLP junctions are tiny
+            bi = shrink_to_divisor(n_in, cfg.block)
+            bo = shrink_to_divisor(n_out, cfg.block)
             spec = SparseLinearSpec(
                 n_in=n_in, n_out=n_out, rho=rho,
                 mode=mode, method=cfg.method, cf_type=cfg.cf_type,

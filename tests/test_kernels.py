@@ -61,6 +61,106 @@ def test_csd_spmm_dx_dw(case):
     np.testing.assert_allclose(dw, dw_ref, atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("case", SPMM_CASES[:3])
+def test_csd_spmm_backward_kernels_match_xla_paths(case):
+    """Interpret-mode Pallas dx/dw == the `_xla_dx`/`_xla_dw` fallback
+    lowerings — the backward kernels are certified against the exact
+    slot-sweep forms the XLA backend executes, not only the ref oracles."""
+    n_in, n_out, bl, br, rho, m, bm = case
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=7)
+    pat = ops._Pat(bp)
+    dy = jax.random.normal(jax.random.key(10), (m, n_out))
+    x = jax.random.normal(jax.random.key(11), (m, n_in))
+    w = jax.random.normal(jax.random.key(12),
+                          (bp.n_rb, bp.d_in_b, bl, br))
+    dx = csd_spmm.csd_spmm_dx(dy, w, bp.out_idx, bp.out_slot, block_m=bm,
+                              interpret=True)
+    np.testing.assert_allclose(dx, ops._xla_dx(dy, w, pat), atol=2e-5,
+                               rtol=2e-5)
+    dw = csd_spmm.csd_spmm_dw(x, dy, bp.block_idx, block_in=bl,
+                              block_out=br, block_m=bm, interpret=True)
+    np.testing.assert_allclose(dw, ops._xla_dw(x, dy, pat), atol=2e-5,
+                               rtol=2e-5)
+
+
+# -- batched (expert-major) kernels vs vmapped oracles -----------------------
+
+BATCHED_CASES = [
+    # (E, n_in, n_out, bl, br, rho, m, block_m)
+    (2, 64, 64, 8, 8, 0.5, 16, 8),
+    (3, 64, 48, 8, 8, 0.5, 16, 8),
+    (4, 128, 64, 16, 16, 0.25, 32, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", BATCHED_CASES)
+def test_csd_spmm_fwd_batched(case, dtype):
+    e, n_in, n_out, bl, br, rho, m, bm = case
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=1)
+    x = jax.random.normal(jax.random.key(0), (e, m, n_in), dtype)
+    w = jax.random.normal(jax.random.key(1),
+                          (e, bp.n_rb, bp.d_in_b, bl, br), dtype)
+    y_ref = ref.csd_spmm_fwd_batched_ref(x, w, bp.block_idx)
+    y = csd_spmm.csd_spmm_fwd(x, w, bp.block_idx, block_m=bm,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", BATCHED_CASES[:2])
+def test_csd_spmm_dx_dw_batched(case):
+    """Batched backward kernels vs vmapped ref oracles AND the vmapped XLA
+    fallback paths (both lowerings of the same expert-major layout)."""
+    e, n_in, n_out, bl, br, rho, m, bm = case
+    bp = make_block_pattern(n_in, n_out, rho, block_in=bl, block_out=br,
+                            seed=2)
+    pat = ops._Pat(bp)
+    dy = jax.random.normal(jax.random.key(2), (e, m, n_out))
+    x = jax.random.normal(jax.random.key(3), (e, m, n_in))
+    w = jax.random.normal(jax.random.key(4),
+                          (e, bp.n_rb, bp.d_in_b, bl, br))
+    dx = csd_spmm.csd_spmm_dx(dy, w, bp.out_idx, bp.out_slot, block_m=bm,
+                              interpret=True)
+    np.testing.assert_allclose(
+        dx, ref.csd_spmm_dx_batched_ref(dy, w, bp.out_idx, bp.out_slot),
+        atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(dx, ops._xla_dx_batched(dy, w, pat),
+                               atol=2e-5, rtol=2e-5)
+    dw = csd_spmm.csd_spmm_dw(x, dy, bp.block_idx, block_in=bl,
+                              block_out=br, block_m=bm, interpret=True)
+    np.testing.assert_allclose(
+        dw, ref.csd_spmm_dw_batched_ref(x, dy, bp.block_idx, bl, br),
+        atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(dw, ops._xla_dw_batched(x, dy, pat),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_csd_spmm_fwd_batched_epilogue():
+    """Fused bias+activation in the batched kernel == epilogue outside."""
+    e, n_in, n_out, bl, br, m, bm = 3, 64, 48, 8, 8, 16, 8
+    bp = make_block_pattern(n_in, n_out, 0.5, block_in=bl, block_out=br,
+                            seed=3)
+    x = jax.random.normal(jax.random.key(5), (e, m, n_in))
+    w = jax.random.normal(jax.random.key(6),
+                          (e, bp.n_rb, bp.d_in_b, bl, br))
+    b = jax.random.normal(jax.random.key(7), (e, n_out))
+    y = csd_spmm.csd_spmm_fwd(x, w, bp.block_idx, bias=b,
+                              activation="relu", block_m=bm,
+                              interpret=True)
+    z = ref.csd_spmm_fwd_batched_ref(x, w, bp.block_idx) + b[:, None]
+    np.testing.assert_allclose(y, jax.nn.relu(z), atol=1e-5, rtol=1e-5)
+    # save_preact returns the batched pre-activation alongside gelu output
+    y2, z2 = csd_spmm.csd_spmm_fwd(x, w, bp.block_idx, bias=b,
+                                   activation="gelu", save_preact=True,
+                                   block_m=bm, interpret=True)
+    np.testing.assert_allclose(z2, z, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(y2, jax.nn.gelu(z, approximate=True),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_csd_matmul_grad_matches_dense_oracle():
     bp = make_block_pattern(64, 48, 0.5, block_in=8, block_out=8, seed=0)
     x = jax.random.normal(jax.random.key(0), (16, 64))

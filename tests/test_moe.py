@@ -1,4 +1,6 @@
-"""MoE unit tests: routing properties, local-vs-brute-force equivalence."""
+"""MoE unit tests: routing properties, local-vs-brute-force equivalence,
+and pre-defined sparse expert junctions (the batched csd_matmul path) vs
+the dense ``kernels.ref`` expert oracle."""
 import dataclasses
 
 import jax
@@ -6,17 +8,36 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import block_weights_to_dense
+from repro.kernels import ref
 from repro.nn import ModelConfig, MoEConfig
+from repro.nn.common import SparsityConfig
 from repro.nn.ffn import MoE
 
 
-def _moe(capacity_factor=100.0, n_routed=8, top_k=2, n_shared=0):
+def _moe(capacity_factor=100.0, n_routed=8, top_k=2, n_shared=0,
+         sparsity=None):
     cfg = ModelConfig(
         n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
         vocab_size=64, dtype="float32",
         moe=MoEConfig(n_routed=n_routed, top_k=top_k, n_shared=n_shared,
-                      d_expert=16, capacity_factor=capacity_factor))
+                      d_expert=16, capacity_factor=capacity_factor),
+        sparsity=sparsity or SparsityConfig())
     return MoE(cfg), cfg
+
+
+_SPARSE = SparsityConfig(enabled=True, rho_ffn=(0.5, 0.75), block_in=8,
+                         block_out=8, moe_sparsity=True, backend="xla")
+
+
+def _dense_expert_weights(moe, params):
+    """Expand the block-sparse expert slabs to (E, n, n) dense-with-zeros."""
+    E = moe.mc.n_routed
+    return tuple(
+        jnp.stack([block_weights_to_dense(params[n][e], pat)
+                   for e in range(E)])
+        for n, pat in (("up", moe.up_pat), ("gate", moe.gate_pat),
+                       ("down", moe.down_pat)))
 
 
 def test_moe_local_matches_brute_force():
@@ -79,6 +100,79 @@ def test_moe_shared_experts_add():
     p2 = dict(params, shared=jax.tree.map(jnp.zeros_like, params["shared"]))
     y2, _ = moe_s(p2, x)
     assert float(jnp.abs(y - y2).sum()) > 0
+
+
+# -- pre-defined sparse expert junctions (batched csd_matmul path) -----------
+
+
+def test_sparse_moe_expert_ffn_matches_dense_ref_oracle():
+    """_expert_ffn with block-sparse slabs (the batched csd_matmul path)
+    == kernels.ref.moe_expert_ffn_ref on the dense-expanded weights."""
+    moe, cfg = _moe(sparsity=_SPARSE)
+    assert moe.up_pat is not None and moe.down_pat is not None
+    params = moe.init(jax.random.key(0))
+    # the stacked slabs really carry the batched junction layout
+    assert params["up"].ndim == 5 and params["down"].ndim == 5
+    upd, gd, dd = _dense_expert_weights(moe, params)
+    xe = jax.random.normal(jax.random.key(1), (8, 5, 32))
+    ye = moe._expert_ffn(params["up"], params["gate"], params["down"], xe)
+    y_ref = ref.moe_expert_ffn_ref(xe, upd, gd, dd, moe.act)
+    np.testing.assert_allclose(ye, y_ref, atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_moe_gradients_match_dense_ref_oracle():
+    """jax.grad through the sparse expert junctions == grads through the
+    dense ref oracle, projected back onto the pattern positions."""
+    moe, cfg = _moe(sparsity=_SPARSE)
+    params = moe.init(jax.random.key(0))
+    xe = jax.random.normal(jax.random.key(2), (8, 4, 32))
+
+    def loss_sparse(p):
+        return jnp.sum(jnp.sin(moe._expert_ffn(p["up"], p["gate"],
+                                               p["down"], xe)))
+
+    def loss_dense(p):
+        upd, gd, dd = _dense_expert_weights(moe, p)
+        return jnp.sum(jnp.sin(
+            ref.moe_expert_ffn_ref(xe, upd, gd, dd, moe.act)))
+
+    g_s = jax.grad(loss_sparse)(params)
+    g_d = jax.grad(loss_dense)(params)
+    for n in ("up", "gate", "down"):
+        np.testing.assert_allclose(g_s[n], g_d[n], atol=1e-4, rtol=1e-4,
+                                   err_msg=n)
+
+
+def test_sparse_moe_full_forward_matches_dense_oracle_moe():
+    """End-to-end: a sparse-expert MoE == a dense-expert MoE whose weights
+    are the dense expansions of the same slabs (routing identical)."""
+    moe_s, cfg = _moe(sparsity=_SPARSE)
+    moe_d, _ = _moe()
+    params = moe_s.init(jax.random.key(0))
+    upd, gd, dd = _dense_expert_weights(moe_s, params)
+    params_d = dict(params, up=upd, gate=gd, down=dd)
+    x = jax.random.normal(jax.random.key(3), (2, 6, 32))
+    y_s, aux_s = moe_s(params, x)
+    y_d, aux_d = moe_d(params_d, x)
+    np.testing.assert_allclose(y_s, y_d, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(aux_s["moe_lb"], aux_d["moe_lb"], rtol=1e-5)
+
+
+def test_sparse_moe_gradients_flow_and_param_count_shrinks():
+    moe, cfg = _moe(sparsity=_SPARSE)
+    params = moe.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(4), (2, 4, 32))
+
+    def loss(p):
+        y, aux = moe(p, x)
+        return jnp.sum(y ** 2) + aux["moe_lb"] + aux["moe_z"]
+
+    g = jax.grad(loss)(params)
+    for name in ("router", "up", "gate", "down"):
+        assert float(jnp.abs(g[name]).sum()) > 0, name
+    # storage really shrinks: up slab holds rho_up * dense elements
+    dense_elems = 8 * 32 * 16
+    assert params["up"].size == pytest.approx(0.5 * dense_elems)
 
 
 def test_load_balance_loss_prefers_uniform():

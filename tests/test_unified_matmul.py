@@ -129,6 +129,69 @@ def test_sparse_linear_block_modes_route_through_csd_matmul(mode):
     np.testing.assert_allclose(g1["b"], g2["b"], atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("activation", [None, "relu", "gelu"])
+def test_padded_m_forward_and_grads_match_unpadded_xla(activation):
+    """Regression for the padded-M path: leading dims whose product (here
+    M=3*5=15) is NOT a multiple of block_m must produce the same forward
+    value AND gradients as the unpadded XLA route — including the bias
+    cotangent: the zero-padded rows the Pallas path appends must not leak
+    into db (they see bias + activation in-kernel, so a naive sum over the
+    padded dy would overcount)."""
+    bp, _, w, b = _setup(seed=7)
+    x = jax.random.normal(jax.random.key(11), (3, 5, 64))  # M=15, bm=8
+
+    y = ops.csd_matmul(x, w, bp, bias=b, activation=activation,
+                       backend="pallas", block_m=8, interpret=True)
+    y_ref = ops.csd_matmul(x, w, bp, bias=b, activation=activation,
+                           backend="xla")
+    np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-5)
+
+    def loss(w, b, x, kw):
+        return jnp.sum(jnp.sin(ops.csd_matmul(
+            x, w, bp, bias=b, activation=activation, **kw)))
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(
+        w, b, x, dict(backend="pallas", block_m=8, interpret=True))
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(w, b, x, dict(backend="xla"))
+    for got, ref, name in zip(g, g_ref, ("dw", "db", "dx")):
+        np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4,
+                                   err_msg=f"{name} act={activation}")
+
+
+def test_batched_routes_match_dense_expert_oracle():
+    """Batched (expert-major) layout: every execution route == the
+    per-expert masked-dense einsum, forward and gradients (incl. db)."""
+    bp, _, _, _ = _setup(seed=8)
+    E = 3
+    ks = jax.random.split(jax.random.key(8), 3)
+    x = jax.random.normal(ks[0], (E, 7, 64))  # M=7: pallas pads per expert
+    w = jax.random.normal(ks[1], (E, bp.n_rb, bp.d_in_b, 8, 8))
+    b = jax.random.normal(ks[2], (E, 48))
+    wd = jnp.stack([block_weights_to_dense(w[e], bp) for e in range(E)])
+
+    def loss_dense(w, b, x):
+        wd = jnp.stack([block_weights_to_dense(w[e], bp)
+                        for e in range(E)])
+        z = jnp.einsum("ecd,edf->ecf", x, wd) + b[:, None]
+        return jnp.sum(jnp.sin(jax.nn.relu(z)))
+
+    y_ref = jax.nn.relu(jnp.einsum("ecd,edf->ecf", x, wd) + b[:, None])
+    g_ref = jax.grad(loss_dense, argnums=(0, 1, 2))(w, b, x)
+    for kw in _ROUTES:
+        y = ops.csd_matmul(x, w, bp, bias=b, activation="relu", **kw)
+        np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-5,
+                                   err_msg=str(kw))
+
+        def loss_sparse(w, b, x, kw=kw):
+            return jnp.sum(jnp.sin(ops.csd_matmul(
+                x, w, bp, bias=b, activation="relu", **kw)))
+
+        g = jax.grad(loss_sparse, argnums=(0, 1, 2))(w, b, x)
+        for got, ref, name in zip(g, g_ref, ("dw", "db", "dx")):
+            np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4,
+                                       err_msg=f"{name} {kw}")
+
+
 def test_pallas_padding_with_epilogue():
     """Odd M exercises the block_m padding path; padded rows see bias +
     activation in-kernel and must not leak into outputs or gradients."""
