@@ -74,6 +74,23 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
         emit(f"kernel/fused_step_rho{rho}", t_sfus,
              f"unfused_us={t_sunf:.2f};fused_speedup={t_sunf / t_sfus:.2f}x")
 
+    # decode-shape (skinny-M) regime: the serving engine's decode steps
+    # run csd_matmul at M = batch-of-slots (1..8) — track it so the
+    # gather/scatter overhead at tiny M is visible next to the training
+    # shapes above
+    bp_dec = make_block_pattern(n_in, n_out, 0.25, block_in=128,
+                                block_out=128, seed=0)
+    w_dec = jax.random.normal(
+        jax.random.key(5), (bp_dec.n_rb, bp_dec.d_in_b, 128, 128)) * 0.02
+    f_dec = jax.jit(lambda x, w: ops.csd_matmul(x, w, bp_dec,
+                                                backend="xla"))
+    for m_dec in (1, 2, 4, 8):
+        xm = jax.random.normal(jax.random.key(6), (m_dec, n_in))
+        t_dm = time_call(dense, xm, wd)
+        t_sm = time_call(f_dec, xm, w_dec)
+        emit(f"kernel/csd_decode_m{m_dec}_rho0.25", t_sm,
+             f"dense_us={t_dm:.2f};speedup_vs_dense={t_dm / t_sm:.2f}x")
+
     # training-step complexity scales with density (paper's core claim)
     def step_flops(rho):
         if rho == 1.0:

@@ -24,7 +24,7 @@ def main() -> None:
 
     from . import (fig1_histograms, fig7_junction_density, fig9_large_sparse,
                    fig12_other_methods, kernel_bench, roofline,
-                   table1_storage, table2_methods)
+                   serving_bench, table1_storage, table2_methods)
     from .common import emit
 
     ep = args.epochs
@@ -40,6 +40,7 @@ def main() -> None:
         "fig12": lambda: fig12_other_methods.run(epochs=ep or 10),
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
+        "serving": lambda: serving_bench.run(quick=not args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

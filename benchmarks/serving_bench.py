@@ -1,0 +1,219 @@
+"""Serving benchmark: the continuous-batching engine vs recompute/cached.
+
+Three generation strategies over the same smoke-scale model and prompts:
+
+* **recompute** — the naive baseline: every emitted token re-runs the full
+  forward pass over a fixed-size padded buffer (O(S) work per token, one
+  compile). This is also the parity oracle for the engine's paged decode.
+* **cached**    — the legacy monolithic prefill + dense-cache decode loop
+  (the ``launch.serve.generate_cached`` algorithm, jitted functions
+  hoisted here so the timed call runs warm).
+* **engine**    — ``ServingEngine``: paged KV cache, chunked prefill
+  interleaved with batched decode, one token per running request per step.
+
+Reported per density (the paper's junction-density sweep applied to the
+serving stack): tokens/sec, time-to-first-token, and the engine's speedup
+over recompute — the acceptance bar is >= 2x at batch >= 4 on CPU/XLA.
+
+``--quick`` runs one density at tiny shapes and writes a JSON artifact for
+CI trend tracking (``--json path``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.nn import build_model
+from repro.serving import EngineConfig, ServingEngine
+
+from .common import emit
+
+
+def make_recompute(model, params):
+    """Build a full-recompute greedy generator with its jitted functions
+    hoisted, so a warmup call actually warms the timed call (a fresh
+    ``jax.jit`` wrapper per call would re-trace every time and the
+    baseline would be measured compile-dominated)."""
+    fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+    logits_at = jax.jit(
+        lambda p, h, n: model.logits_fn(
+            p, jax.lax.dynamic_slice_in_dim(h, n - 1, 1, axis=1)))
+
+    def run(prompts: np.ndarray, steps: int):
+        """Returns (tokens (B, steps), tokens/sec, ttft seconds)."""
+        b, prompt_len = prompts.shape
+        buf = np.zeros((b, prompt_len + steps), np.int32)
+        buf[:, :prompt_len] = prompts
+        out = np.zeros((b, steps), np.int32)
+        t0 = time.perf_counter()
+        ttft = None
+        n = prompt_len
+        for i in range(steps):
+            h = fwd(params, jnp.asarray(buf))
+            tok = np.asarray(jnp.argmax(logits_at(params, h, n), -1))[:, 0]
+            if ttft is None:
+                ttft = time.perf_counter() - t0
+            out[:, i] = tok
+            if n < buf.shape[1]:
+                buf[:, n] = tok
+            n += 1
+        dt = time.perf_counter() - t0
+        return out, b * steps / max(dt, 1e-9), ttft
+
+    return run
+
+
+def make_cached(model, params, s_max: int):
+    """Dense-cache greedy generator (the legacy loop) with hoisted jits."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, s_max))
+    step = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def run(prompts: np.ndarray, steps: int):
+        """Returns (tokens (B, steps), tokens/sec)."""
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(steps - 1):
+            logits, cache = step(params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        toks = jnp.concatenate(out, axis=1)
+        toks.block_until_ready()
+        dt = time.perf_counter() - t0
+        return np.asarray(toks), prompts.shape[0] * steps / max(dt, 1e-9)
+
+    return run
+
+
+def make_engine(model, params, batch: int, max_len: int, page_size: int,
+                token_budget: int) -> ServingEngine:
+    pages_per_seq = -(-max_len // page_size)
+    return ServingEngine(
+        model, params,
+        EngineConfig(max_slots=min(batch, 8), page_size=page_size,
+                     total_pages=batch * pages_per_seq,
+                     max_pages_per_seq=pages_per_seq,
+                     token_budget=token_budget, prefill_chunk=32))
+
+
+def engine_generate(eng: ServingEngine, prompts, steps: int):
+    """One engine run (the engine — and its compiled step — is reused
+    across calls; warm up with a short run first).
+
+    Returns (outputs, tokens/sec, mean ttft seconds, stats)."""
+    eng.ttft.clear()
+    t0 = time.perf_counter()
+    outs = eng.run(prompts, steps)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    ttft = float(np.mean(list(eng.ttft.values()))) if eng.ttft else 0.0
+    return outs, n_tok / max(dt, 1e-9), ttft, dict(eng.sched.stats)
+
+
+def run(arch: str = "qwen2-7b", batch: int = 4, prompt_len: int = 32,
+        steps: int = 32, page_size: int = 16, quick: bool = False,
+        densities=None) -> dict:
+    if quick:
+        batch, prompt_len, steps = 4, 16, 8
+    base = get_config(arch, smoke=True)
+    if densities is None:
+        # default = the config's own junction setup (sparse for most
+        # archs); "dense" isolates what pre-defined sparsity costs in the
+        # skinny-M decode regime; the tuple sweeps a lower density
+        densities = [None] if quick else [None, "dense", (0.25, 0.5)]
+
+    rng = np.random.default_rng(0)
+    results = {"arch": arch, "batch": batch, "prompt_len": prompt_len,
+               "steps": steps, "page_size": page_size, "rows": []}
+    for rho in densities:
+        if rho is None:
+            cfg = base            # the config's own (usually sparse) FFN
+            tag = "default"
+        elif rho == "dense":
+            cfg = base.with_(sparsity=dataclasses.replace(
+                base.sparsity, enabled=False))
+            tag = "dense"
+        else:
+            cfg = base.with_(sparsity=dataclasses.replace(
+                base.sparsity, enabled=True, rho_ffn=rho))
+            tag = f"rho{rho[0]}"
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        prompts_same = rng.integers(
+            0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+        mixed = [rng.integers(0, cfg.vocab_size,
+                              (max(4, prompt_len * (i % 4 + 1) // 4),)
+                              ).astype(np.int32) for i in range(batch)]
+
+        # warmup all three paths (compile time excluded from rates)
+        recompute = make_recompute(model, params)
+        cached = make_cached(model, params, prompt_len + steps)
+        recompute(prompts_same, 2)
+        _, r_tps, r_ttft = recompute(prompts_same, steps)
+        cached(prompts_same, 2)
+        _, c_tps = cached(prompts_same, steps)
+        eng = make_engine(model, params, batch, prompt_len + steps,
+                          page_size, token_budget=batch + prompt_len)
+        engine_generate(eng, list(prompts_same), 2)
+        _, e_tps, e_ttft, stats = engine_generate(
+            eng, list(prompts_same), steps)
+        _, m_tps, m_ttft, _ = engine_generate(eng, mixed, steps)
+
+        speedup = e_tps / max(r_tps, 1e-9)
+        row = {"density": tag,
+               "recompute_tps": round(r_tps, 1),
+               "recompute_ttft_ms": round(1e3 * r_ttft, 1),
+               "cached_tps": round(c_tps, 1),
+               "engine_tps": round(e_tps, 1),
+               "engine_ttft_ms": round(1e3 * e_ttft, 1),
+               "engine_mixed_tps": round(m_tps, 1),
+               "engine_mixed_ttft_ms": round(1e3 * m_ttft, 1),
+               "speedup_vs_recompute": round(speedup, 2),
+               "stats": stats}
+        results["rows"].append(row)
+        emit(f"serving/{arch}_{tag}_recompute_tps", 0.0, round(r_tps, 1))
+        emit(f"serving/{arch}_{tag}_cached_tps", 0.0, round(c_tps, 1))
+        emit(f"serving/{arch}_{tag}_engine_tps", 0.0, round(e_tps, 1))
+        emit(f"serving/{arch}_{tag}_engine_ttft_ms", 0.0,
+             round(1e3 * e_ttft, 1))
+        emit(f"serving/{arch}_{tag}_speedup_vs_recompute", 0.0,
+             f"{speedup:.2f}x")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write results to this JSON file (CI artifact)")
+    args = ap.parse_args()
+    res = run(arch=args.arch, batch=args.batch, prompt_len=args.prompt_len,
+              steps=args.gen, page_size=args.page_size, quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.json}")
+    # acceptance gate on the default row (the config's own junction
+    # setup — what CI tracks); other rows are informational sweeps
+    ok = res["rows"][0]["speedup_vs_recompute"] >= 2.0
+    print(f"engine >= 2x recompute at batch={res['batch']} "
+          f"(default density): {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

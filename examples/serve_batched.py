@@ -1,11 +1,16 @@
-"""End-to-end driver #3: batched serving (prefill + decode loop).
+"""End-to-end driver #3: continuous-batching serving.
 
-Loads a smoke-scale assigned architecture, prefills a batch of prompts and
-decodes continuations with greedy/sampled decoding through the production
-decode path (KV caches, single-token steps).
+Loads a smoke-scale assigned architecture and serves a batch of
+*mixed-length* prompts through ``repro.serving.ServingEngine``: chunked
+prefill interleaves with decode under a per-step token budget, KV lives in
+a paged cache, and short requests finish (and free their pages) while long
+ones are still decoding — no head-of-line blocking on the longest prompt.
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b \
         [--batch 4 --prompt-len 32 --gen 24 --sample]
+
+``--no-engine`` runs the legacy monolithic prefill + dense-cache decode
+loop instead (same-length prompts only) for an A/B comparison.
 """
 import argparse
 import time
@@ -15,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import generate
+from repro.launch.serve import generate_cached
 from repro.nn import build_model
 
 
@@ -23,31 +28,75 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="longest prompt; engine mode mixes lengths "
+                         "down to prompt-len/4")
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--no-engine", action="store_true",
+                    help="legacy dense-cache loop (A/B baseline)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=64)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
-    extra = None
-    if cfg.input_mode == "embeddings" or cfg.enc_dec is not None:
-        extra = {"embeds": jnp.asarray(
-            rng.normal(size=(args.batch, args.prompt_len,
-                             cfg.frontend_dim)), jnp.float32)}
 
-    toks, tps = generate(model, params, prompt,
-                         s_max=args.prompt_len + args.gen,
-                         steps=args.gen, greedy=not args.sample,
-                         key=jax.random.key(1), extra_batch=extra)
-    print(f"{args.arch}: generated {toks.shape[1]} tokens x "
-          f"{toks.shape[0]} sequences at {tps:.1f} tok/s")
+    legacy_only = (cfg.input_mode == "embeddings" or cfg.enc_dec is not None
+                   or (cfg.moe is not None and cfg.moe.capacity_factor
+                       * cfg.moe.top_k < cfg.moe.n_routed))
+    if args.no_engine or legacy_only:
+        if legacy_only and not args.no_engine:
+            print(f"{args.arch}: stub-frontend/enc-dec/capacity-"
+                  f"constrained MoE — legacy path")
+        prompt = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+        extra = None
+        if legacy_only:
+            extra = {"embeds": jnp.asarray(
+                rng.normal(size=(args.batch, args.prompt_len,
+                                 cfg.frontend_dim)), jnp.float32)}
+        toks, tps = generate_cached(
+            model, params, prompt, s_max=args.prompt_len + args.gen,
+            steps=args.gen, greedy=not args.sample,
+            key=jax.random.key(1), extra_batch=extra)
+        print(f"{args.arch} [legacy]: {toks.shape[1]} tokens x "
+              f"{toks.shape[0]} sequences at {tps:.1f} tok/s")
+        for i in range(min(2, args.batch)):
+            print(f"  seq{i}: {np.asarray(toks[i])[:16]} ...")
+        return
+
+    from repro.serving import EngineConfig, ServingEngine
+
+    # mixed prompt lengths: the whole point of continuous batching
+    lens = [max(4, args.prompt_len * (i % 4 + 1) // 4)
+            for i in range(args.batch)]
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    pages_per_seq = -(-(max(lens) + args.gen) // args.page_size)
+    eng = ServingEngine(
+        model, params,
+        EngineConfig(max_slots=min(args.batch, 8),
+                     page_size=args.page_size,
+                     total_pages=args.batch * pages_per_seq,
+                     max_pages_per_seq=pages_per_seq,
+                     token_budget=args.token_budget,
+                     prefill_chunk=32, greedy=not args.sample),
+        key=jax.random.key(1))
+    t0 = time.time()
+    outs = eng.run(prompts, args.gen)
+    dt = time.time() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"{args.arch} [engine]: {n_tok} tokens over {args.batch} "
+          f"requests (prompt lens {lens}) at {n_tok / dt:.1f} tok/s; "
+          f"stats={eng.sched.stats}")
+    if eng.ttft:
+        ms = 1e3 * float(np.mean(list(eng.ttft.values())))
+        print(f"  mean time-to-first-token: {ms:.1f} ms")
     for i in range(min(2, args.batch)):
-        print(f"  seq{i}: {np.asarray(toks[i])[:16]} ...")
+        print(f"  req{i} (len {lens[i]}): {outs[i][:16]} ...")
 
 
 if __name__ == "__main__":

@@ -7,5 +7,5 @@
 * ``ref``             — pure-jnp oracles (the correctness contract).
 """
 from .ops import csd_matmul  # noqa: F401
-from .flash_attention import flash_attention  # noqa: F401
+from .flash_attention import flash_attention, paged_decode_attention  # noqa: F401
 from . import ref  # noqa: F401

@@ -142,3 +142,160 @@ def flash_attention(
         interpret=interpret,
     )(qt, kt, vt)
     return jnp.swapaxes(out, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (serving): one query token over a paged KV cache
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         window: Optional[int], softcap: Optional[float],
+                         page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (page, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, page)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = len_ref[b]                            # valid keys: kpos < length
+    kpos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = kpos < length
+    if window is not None:
+        mask &= kpos > (length - 1) - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    pexp = jnp.exp(s - m_new)
+    pexp = jnp.where(m_new > _NEG_INF / 2, pexp, 0.0)
+    corr = jnp.where(m_prev > _NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    l_new = corr * l_ref[:, :1] + jnp.sum(pexp, axis=1, keepdims=True)
+
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (page, Dh)
+    pv = jax.lax.dot_general(pexp, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def _paged_decode_pallas(q, k_pages, v_pages, page_table, lengths, *,
+                         window, softcap, scale, interpret):
+    b, hkv, g, dh = q.shape
+    page_size = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    # (P, page, Hkv, Dh) blocked as (1 page-row, page, 1 head, Dh); the
+    # physical page id comes from the scalar-prefetched table — this is
+    # the kernel-side form of the free-list indirection
+    kv_spec = pl.BlockSpec(
+        (1, page_size, 1, dh),
+        lambda bb, h, p, pt, ln: (jnp.maximum(pt[bb, p], 0), 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bb, h, p, pt, ln: (bb, h, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bb, h, p, pt, ln: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, _LANES), jnp.float32),
+            pltpu.VMEM((g, _LANES), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
+        page_size=page_size, n_pages=n_pages)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)
+
+
+def _paged_decode_xla(q, k_pages, v_pages, page_table, lengths, *,
+                      window, softcap, scale):
+    """Gather-based fallback: materialize each sequence's logical KV view
+    from its page table, then run the standard masked decode einsum."""
+    b, hkv, g, dh = q.shape
+    page_size = k_pages.shape[1]
+    idx = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
+    k = k_pages[idx].reshape(b, -1, hkv, dh)     # (B, S, Hkv, Dh)
+    v = v_pages[idx].reshape(b, -1, hkv, dh)
+    logits = jnp.einsum("bhgd,bkhd->bhgk",
+                        q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None] < lengths[:, None]         # (B, S)
+    if window is not None:
+        mask &= kpos[None] > (lengths[:, None] - 1) - window
+    logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(m > _NEG_INF / 2, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,           # (B, Hkv, G, Dh) — one grouped query token
+    k_pages: jax.Array,     # (P, page_size, Hkv, Dh) physical page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, n_pages) int32, -1 = unmapped
+    lengths: jax.Array,     # (B,) int32 — valid keys per row (kpos < len)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    backend: str = "auto",
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention over a paged KV cache; returns like ``q``.
+
+    ``backend="auto"`` follows the repo convention: the Pallas kernel on
+    TPU (page table scalar-prefetched, one page per grid step, online
+    softmax across pages), the gather-based XLA lowering elsewhere.
+    Unmapped table entries are safe: their logical positions are >= the
+    sequence length, so they are masked before the softmax.
+    """
+    from .ops import _resolve
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    lengths = lengths.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+    be = _resolve(backend)
+    if be == "pallas":
+        return _paged_decode_pallas(
+            q, k_pages, v_pages, page_table, lengths, window=window,
+            softcap=softcap, scale=scale, interpret=interpret)
+    return _paged_decode_xla(
+        q, k_pages, v_pages, page_table, lengths, window=window,
+        softcap=softcap, scale=scale)

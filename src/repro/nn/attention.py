@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import shard_map
+from ..serving import kv_cache as paged_kv
 from .common import ModelConfig, current_mesh, logical_to_spec, shard
 from .layers import Linear, RMSNorm, apply_rope
 
@@ -352,3 +353,75 @@ class Attention:
             softcap=self.cfg.logit_softcap, scale=self.dh ** -0.5)
         o = o.reshape(b, 1, self.h * self.dh)
         return self.wo(params["o"], o), cache
+
+    # -- paged serving step (decode or chunked prefill) -----------------------
+
+    def paged_step(self, params: dict, x: jax.Array, pos: jax.Array,
+                   n_new: jax.Array, cache: dict, page_table: jax.Array,
+                   *, backend: str = "auto", interpret: bool = False
+                   ) -> Tuple[jax.Array, dict]:
+        """One serving step against a paged KV cache.
+
+        x: (B, C, d) — C == 1 is a decode step (per-row positions, routed
+        through the paged-attention kernel); C > 1 is one chunk of prefill
+        (causal within the chunk, attending to previously-cached pages via
+        gather). pos: (B,) tokens already cached per row; n_new: (B,) valid
+        tokens in this chunk (0 = inactive row: its KV writes land on the
+        discard page and its output is garbage the engine ignores).
+        cache: {'k_pages','v_pages'}: (P+1, page, Hkv, Dh), shared page
+        pool addressed through ``page_table`` (B, max_pages). Returns
+        (out (B, C, d), updated cache).
+        """
+        if self.cross:
+            raise NotImplementedError("paged serving: no cross-attention")
+        cfg = self.cfg
+        b, c = x.shape[:2]
+        k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+        page_size = k_pages.shape[1]
+        trash = k_pages.shape[0] - 1
+        positions = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        valid = jnp.arange(c)[None] < n_new[:, None]
+
+        q, k_new, v_new = self._qkv(params, x, None, positions)
+        phys, off = paged_kv.physical_addresses(
+            page_table, positions, valid, page_size, trash)
+        k_pages, v_pages = paged_kv.write_kv(
+            k_pages, v_pages, k_new, v_new, phys, off)
+        lengths = pos + n_new
+        scale = self.dh ** -0.5
+
+        if c == 1:
+            from ..kernels.flash_attention import paged_decode_attention
+            qg = q.reshape(b, self.kv, self.groups, self.dh)
+            o = paged_decode_attention(
+                qg, k_pages, v_pages, page_table, lengths,
+                window=self.window, softcap=cfg.logit_softcap,
+                scale=scale, backend=backend, interpret=interpret)
+            o = o.reshape(b, 1, self.h * self.dh).astype(x.dtype)
+        else:
+            # chunk prefill: gather this batch row's logical KV view and
+            # run masked grouped attention (causal against everything
+            # already in the pages, including this just-written chunk)
+            k = paged_kv.gather_kv(k_pages, page_table).astype(q.dtype)
+            v = paged_kv.gather_kv(v_pages, page_table).astype(q.dtype)
+            qg = q.reshape(b, c, self.kv, self.groups, self.dh)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk",
+                                qg.astype(jnp.float32) * scale,
+                                k.astype(jnp.float32))
+            logits = _softcap(logits, cfg.logit_softcap)
+            kpos = jnp.arange(k.shape[1])
+            mask = kpos[None, None] <= positions[:, :, None]   # (B, C, S)
+            if self.window is not None:
+                mask &= kpos[None, None] > positions[:, :, None] \
+                    - self.window
+            mask &= valid[..., None]
+            logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
+            m = jnp.max(logits, axis=-1, keepdims=True)
+            p = jnp.exp(logits - jnp.maximum(m, _NEG_INF / 2))
+            p = jnp.where(m > _NEG_INF / 2, p, 0.0)
+            l = jnp.sum(p, axis=-1, keepdims=True)
+            p = p / jnp.where(l == 0.0, 1.0, l)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+            o = o.reshape(b, c, self.h * self.dh).astype(x.dtype)
+        out = self.wo(params["o"], o)
+        return out, {"k_pages": k_pages, "v_pages": v_pages}

@@ -241,6 +241,69 @@ class Stack:
             new_cache["epilogue"].append(nc)
         return x, new_cache
 
+    # -- paged serving step ---------------------------------------------------
+
+    def paged_step(self, params: dict, x: jax.Array, pos: jax.Array,
+                   n_new: jax.Array, cache: dict, page_table: jax.Array,
+                   slot_ids: jax.Array, emb: Optional[jax.Array] = None,
+                   *, backend: str = "auto", interpret: bool = False
+                   ) -> Tuple[jax.Array, dict]:
+        """One serving step (decode C==1 or a prefill chunk C>1) against the
+        paged cache built by ``init_paged_cache``.
+
+        Attention layers address the shared page pool through
+        ``page_table`` (B, max_pages); SSM layers carry per-slot recurrent
+        state through the same interface — their state rows are gathered by
+        ``slot_ids`` (B,), stepped, and scattered back, so a B=1 prefill
+        chunk touches only its own slot's state.
+        """
+        def apply(blk, p, xc, c):
+            if isinstance(blk, MambaLayer):
+                rows = jax.tree.map(lambda l: l[slot_ids], c)
+                xc, new_rows = blk.paged_step(
+                    p, xc, pos, n_new, rows, page_table,
+                    backend=backend, interpret=interpret)
+                nc = jax.tree.map(
+                    lambda l, r: l.at[slot_ids].set(r.astype(l.dtype)),
+                    c, new_rows)
+                return xc, nc
+            return blk.paged_step(p, xc, pos, n_new, c, page_table,
+                                  backend=backend, interpret=interpret)
+
+        new_cache: dict = {"prologue": [], "epilogue": [],
+                           "scan": None, "shared": None}
+        for blk, p, c in zip(self.prologue, params["prologue"],
+                             cache["prologue"]):
+            x, nc = apply(blk, p, x, c)
+            new_cache["prologue"].append(nc)
+
+        if self.n_groups:
+            shared_p = params.get("shared")
+
+            def body(xc, xs):
+                p_unit, c_unit, c_sh = xs
+                ncs = []
+                for u, blk in enumerate(self.unit_blocks):
+                    xc, nc = apply(blk, p_unit[u], xc, c_unit[u])
+                    ncs.append(nc)
+                nc_sh = None
+                if self.shared is not None:
+                    xc, nc_sh = self.shared.paged_step(
+                        shared_p, xc, emb, pos, n_new, c_sh, page_table,
+                        backend=backend, interpret=interpret)
+                return xc, (ncs, nc_sh)
+
+            x, (ncs, nc_sh) = jax.lax.scan(
+                body, x, (tuple(params["scan"]), cache["scan"],
+                          cache["shared"]))
+            new_cache["scan"], new_cache["shared"] = ncs, nc_sh
+
+        for blk, p, c in zip(self.epilogue, params["epilogue"],
+                             cache["epilogue"]):
+            x, nc = apply(blk, p, x, c)
+            new_cache["epilogue"].append(nc)
+        return x, new_cache
+
     # -- cache allocation ------------------------------------------------------------
 
     def _blk_cache(self, blk, batch: int, s_max: int, dtype,
@@ -285,6 +348,74 @@ class Stack:
                                None, "batch", "kv_seq", None, None),
                     "v": shard(jnp.zeros(kvshape, dtype),
                                None, "batch", "kv_seq", None, None)}
+        return cache
+
+    def reset_slot_state(self, cache: dict, slot: int) -> dict:
+        """Zero one slot's recurrent (SSM) state rows in a paged cache —
+        called when a freed slot is re-admitted. Attention page buffers
+        need no reset (stale KV is masked by sequence length), but Mamba
+        state is carried unmasked as the chunk's initial state, so a new
+        occupant must not inherit the previous sequence's state."""
+        def zero(tree, scanned):
+            # scanned mamba state leaves are (G, slots, ...) — slot is
+            # axis 1; unscanned are (slots, ...)
+            return jax.tree.map(
+                lambda l: l.at[:, slot].set(0.0) if scanned
+                else l.at[slot].set(0.0), tree)
+
+        new = dict(cache)
+        new["prologue"] = [
+            zero(c, False) if isinstance(b, MambaLayer) else c
+            for b, c in zip(self.prologue, cache["prologue"])]
+        new["epilogue"] = [
+            zero(c, False) if isinstance(b, MambaLayer) else c
+            for b, c in zip(self.epilogue, cache["epilogue"])]
+        if self.n_groups:
+            new["scan"] = [
+                zero(c, True) if isinstance(b, MambaLayer) else c
+                for b, c in zip(self.unit_blocks, cache["scan"])]
+        return new
+
+    def _blk_paged_cache(self, blk, slots: int, total_pages: int,
+                         page_size: int, dtype) -> dict:
+        cfg = self.cfg
+        if isinstance(blk, MambaLayer):
+            return blk.mixer.init_state(slots, jnp.float32)
+        if blk.cross_attn is not None:
+            raise NotImplementedError(
+                "paged serving: cross-attention stacks not supported")
+        shape = (total_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+        return {"self": {"k_pages": jnp.zeros(shape, dtype),
+                         "v_pages": jnp.zeros(shape, dtype)}}
+
+    def init_paged_cache(self, slots: int, total_pages: int,
+                         page_size: int, dtype=jnp.bfloat16) -> dict:
+        """Per-layer page pools (+1 write-discard page each) and per-slot
+        SSM state, shaped to mirror ``init_cache``'s tree so the scan
+        traversal is identical."""
+        cache: dict = {
+            "prologue": [self._blk_paged_cache(b, slots, total_pages,
+                                               page_size, dtype)
+                         for b in self.prologue],
+            "epilogue": [self._blk_paged_cache(b, slots, total_pages,
+                                               page_size, dtype)
+                         for b in self.epilogue],
+            "scan": None, "shared": None,
+        }
+        if self.n_groups:
+            def rep(tree):
+                return jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.n_groups,) + x.shape).copy(), tree)
+            cache["scan"] = [
+                rep(self._blk_paged_cache(b, slots, total_pages,
+                                          page_size, dtype))
+                for b in self.unit_blocks]
+            if self.shared is not None:
+                shape = (self.n_groups, total_pages + 1, page_size,
+                         self.cfg.n_kv_heads, self.cfg.head_dim)
+                cache["shared"] = {"k_pages": jnp.zeros(shape, dtype),
+                                   "v_pages": jnp.zeros(shape, dtype)}
         return cache
 
 
@@ -462,6 +593,39 @@ class LM:
         x = self.ln_f(params["ln_f"], x)
         logits = self.logits_fn(params, x)
         return logits, {"layers": new_layers, "pos": pos + 1}
+
+    # -- paged serving (continuous batching engine) ---------------------------
+
+    def paged_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
+                   n_new: jax.Array, cache: dict, page_table: jax.Array,
+                   slot_ids: jax.Array, *, backend: str = "auto",
+                   interpret: bool = False) -> Tuple[jax.Array, dict]:
+        """One engine step: tokens (B, C) int32, per-row start positions
+        ``pos`` (B,) and valid counts ``n_new`` (B,). C == 1 is a batched
+        decode step; C > 1 one prefill chunk (usually B == 1). Returns
+        (last-valid-token logits (B, 1, V), updated paged cache).
+
+        Only token-input decoder-only models serve through this path;
+        frontends (embeddings) and enc-dec go through the legacy loop.
+        """
+        cfg = self.cfg
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError(
+                "paged serving expects token inputs (stub frontends feed "
+                "the legacy prefill path)")
+        cdt = dtype_of(cfg)
+        x = self.embed(params["embed"], tokens, dtype=cdt)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+        emb = x if self.stack.shared is not None else None
+        x, new_cache = self.stack.paged_step(
+            params["stack"], x, pos, n_new, cache, page_table, slot_ids,
+            emb=emb, backend=backend, interpret=interpret)
+        x = self.ln_f(params["ln_f"], x)
+        idx = jnp.clip(n_new - 1, 0, x.shape[1] - 1)
+        h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self.logits_fn(params, h_last)
+        return logits, new_cache
 
 
 def _write_prefill(cache: dict, kv_new: dict, s: int) -> dict:

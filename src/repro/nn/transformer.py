@@ -128,6 +128,23 @@ class TransformerBlock:
         new_cache["self"] = new_kv
         return x, new_cache
 
+    def paged_step(self, params: dict, x: jax.Array, pos: jax.Array,
+                   n_new: jax.Array, cache: dict, page_table: jax.Array,
+                   *, backend: str = "auto", interpret: bool = False
+                   ) -> Tuple[jax.Array, dict]:
+        """Serving step (decode or prefill chunk) against paged KV."""
+        if self.cross_attn is not None:
+            raise NotImplementedError("paged serving: no cross-attention")
+        h = self.ln_attn(params["ln_attn"], x)
+        h, new_kv = self.attn.paged_step(
+            params["attn"], h, pos, n_new, cache["self"], page_table,
+            backend=backend, interpret=interpret)
+        if self.cfg.post_norms:
+            h = self.ln_attn_post(params["ln_attn_post"], h)
+        x = x + h
+        x, _ = self._ffn_res(params, x, {})
+        return x, dict(cache, **{"self": new_kv})
+
 
 class MambaLayer:
     """Norm + Mamba2 mixer with residual (pure-mamba archs have no FFN)."""
@@ -151,6 +168,24 @@ class MambaLayer:
     def decode(self, params, x, pos, cache):
         h = self.ln(params["ln"], x)
         h, new_state = self.mixer.decode(params["mixer"], h, cache)
+        return x + h, new_state
+
+    def paged_step(self, params, x, pos, n_new, cache, page_table, *,
+                   backend="auto", interpret=False):
+        """Serving step: recurrent state rides the same interface as the
+        paged KV (cache = per-row {'ssd','conv'}); inactive rows
+        (n_new == 0) keep their state unchanged."""
+        h = self.ln(params["ln"], x)
+        if x.shape[1] == 1:
+            h, new_state = self.mixer.decode(params["mixer"], h, cache)
+        else:
+            h, new_state = self.mixer(params["mixer"], h, cache)
+        active = n_new > 0
+        new_state = jax.tree.map(
+            lambda new, old: jnp.where(
+                active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                new.astype(old.dtype), old),
+            new_state, cache)
         return x + h, new_state
 
 
@@ -194,6 +229,17 @@ class SharedAttnBlock:
     def decode(self, params, x, emb, pos, cache):
         h = self.ln_in(params["ln_in"], self._input(x, emb))
         h, new_kv = self.attn.decode(params["attn"], h, pos, cache)
+        x = x + h
+        h = self.ln_ffn(params["ln_ffn"], x)
+        x = x + self.ffn(params["ffn"], h)
+        return x, new_kv
+
+    def paged_step(self, params, x, emb, pos, n_new, cache, page_table, *,
+                   backend="auto", interpret=False):
+        h = self.ln_in(params["ln_in"], self._input(x, emb))
+        h, new_kv = self.attn.paged_step(
+            params["attn"], h, pos, n_new, cache, page_table,
+            backend=backend, interpret=interpret)
         x = x + h
         h = self.ln_ffn(params["ln_ffn"], x)
         x = x + self.ffn(params["ffn"], h)

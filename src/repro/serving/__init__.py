@@ -1,0 +1,32 @@
+"""repro.serving — continuous-batching inference over the sparse kernels.
+
+* ``kv_cache``  — paged KV cache: page pool, free-list allocator, jnp
+                  page tables (jit-compatible address translation).
+* ``scheduler`` — admit/evict/preempt + chunked-prefill planning under a
+                  per-step token budget (the paper's flexible-``z`` time
+                  multiplexing applied to requests).
+* ``engine``    — ``ServingEngine``: prefill through the flash-attention
+                  + csd_matmul path, decode through the paged-attention
+                  kernel (Pallas on TPU, gather-XLA elsewhere).
+
+``engine`` is imported lazily: ``kv_cache``/``scheduler`` are dependency
+-light (the model stack imports them), while the engine pulls in the full
+``repro.nn`` stack.
+"""
+from . import kv_cache, scheduler  # noqa: F401
+from .kv_cache import PageState, init_page_state  # noqa: F401
+from .scheduler import Request, Scheduler, StepPlan  # noqa: F401
+
+__all__ = ["kv_cache", "scheduler", "engine", "PageState",
+           "init_page_state", "Request", "Scheduler", "StepPlan",
+           "ServingEngine", "EngineConfig"]
+
+
+def __getattr__(name):
+    if name in ("engine", "ServingEngine", "EngineConfig"):
+        import importlib
+        mod = importlib.import_module(".engine", __name__)
+        if name == "engine":
+            return mod
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,236 @@
+"""ServingEngine: continuous-batching inference over the paged cache.
+
+One ``step()`` executes a scheduler plan: chunked prefill for sequences
+still consuming their prompt (through the same fused csd_matmul junctions
+as training; attention over previously-cached pages by gather) interleaved
+with one batched decode token for every running sequence (through the
+paged-attention kernel — Pallas on TPU, gather-XLA elsewhere). Fixed
+accelerator memory (the page pool) serves any number / length of requests
+by time-multiplexing the per-step token budget — the serving analog of the
+paper's flexible-``z`` junction hardware.
+
+The jitted step function has one signature for both phases; distinct chunk
+lengths trace separate executables (the scheduler emits power-of-two
+chunks, so there are O(log prefill_chunk) of them). Prompt chunks are
+exact — never padded — so SSM recurrent state advances over real tokens
+only and stays bit-identical to a full-sequence prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.common import dtype_of
+from .scheduler import Request, Scheduler, StepPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine knobs. ``token_budget`` is the per-step work quantum (the
+    paper's degree-of-parallelism ``z``); ``page_size`` the KV allocation
+    granularity; ``max_slots`` the number of resident sequences."""
+    max_slots: int = 8
+    page_size: int = 16
+    total_pages: int = 128
+    max_pages_per_seq: int = 32
+    token_budget: int = 64
+    prefill_chunk: int = 32
+    backend: str = "auto"       # auto | xla | pallas (paged decode kernel)
+    interpret: bool = False     # Pallas interpret mode (CPU tests)
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServingEngine:
+    """Continuous-batching engine: add requests any time, call ``step()``
+    (or ``run()``) and collect finished generations."""
+
+    def __init__(self, model, params, config: Optional[EngineConfig] = None,
+                 *, key: Optional[jax.Array] = None, **overrides):
+        cfg = config or EngineConfig(**overrides)
+        if overrides and config is not None:
+            raise ValueError("pass EngineConfig or overrides, not both")
+        mc = model.cfg
+        if getattr(mc, "enc_dec", None) is not None:
+            raise NotImplementedError(
+                "paged serving supports decoder-only models (enc-dec "
+                "serves through the legacy loop)")
+        if mc.input_mode != "tokens":
+            raise NotImplementedError(
+                "paged serving expects token inputs")
+        moe = getattr(mc, "moe", None)
+        if moe is not None and moe.capacity_factor * moe.top_k \
+                < moe.n_routed:
+            # the batched decode step runs garbage rows for inactive
+            # slots; with finite expert capacity those rows would compete
+            # with (and can evict) real tokens from their expert buckets,
+            # silently corrupting active requests. Serving MoE requires
+            # dropless decode: capacity_factor >= n_routed / top_k.
+            raise NotImplementedError(
+                f"paged serving with capacity-constrained MoE "
+                f"(capacity_factor={moe.capacity_factor}): rebuild the "
+                f"model with capacity_factor >= n_routed/top_k = "
+                f"{moe.n_routed / moe.top_k:.1f} (dropless decode) or "
+                f"use the legacy dense-cache loop")
+        self.model = model
+        self.params = params
+        self.config = cfg
+        self.key = key if key is not None else jax.random.key(0)
+        self.sched = Scheduler(
+            slots=cfg.max_slots, total_pages=cfg.total_pages,
+            page_size=cfg.page_size,
+            max_pages_per_seq=cfg.max_pages_per_seq,
+            token_budget=cfg.token_budget,
+            prefill_chunk=cfg.prefill_chunk)
+        self.cache = model.stack.init_paged_cache(
+            cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc))
+        self._next_id = 0
+        self.outputs: Dict[int, np.ndarray] = {}
+        self.ttft: Dict[int, float] = {}
+        self._t_added: Dict[int, float] = {}
+
+        def raw_step(params, cache, page_table, tokens, pos, n_new,
+                     slot_ids):
+            return model.paged_step(
+                params, tokens, pos, n_new, cache, page_table, slot_ids,
+                backend=cfg.backend, interpret=cfg.interpret)
+
+        self._step = jax.jit(raw_step, donate_argnums=(1,))
+
+    # -- request intake ----------------------------------------------------
+
+    def add_request(self, prompt, max_new_tokens: int,
+                    req_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = len(prompt) + max_new_tokens
+        cap = min(self.config.max_pages_per_seq,
+                  self.config.total_pages) * self.config.page_size
+        if need > cap:
+            raise ValueError(
+                f"request needs {need} tokens but a sequence can hold at "
+                f"most {cap} (min(max_pages_per_seq, total_pages) * "
+                f"page_size)")
+        if req_id is None:
+            req_id = self._next_id
+        self._next_id = max(self._next_id, req_id) + 1
+        self.sched.add(Request(req_id=req_id, prompt=prompt,
+                               max_new_tokens=max_new_tokens))
+        self._t_added[req_id] = time.perf_counter()
+        return req_id
+
+    # -- sampling ----------------------------------------------------------
+
+    def _sample(self, logits: jax.Array, slot: int) -> int:
+        if self.config.greedy:
+            return int(jnp.argmax(logits))
+        seq = self.sched.active[slot]
+        # per-request stream, folded by absolute position: a preempted and
+        # recomputed sequence re-draws identical tokens
+        k = jax.random.fold_in(self.key, seq.req.req_id)
+        k = jax.random.fold_in(k, len(seq.tokens))
+        return int(jax.random.categorical(
+            k, logits.astype(jnp.float32) / self.config.temperature))
+
+    def _emit(self, slot: int) -> None:
+        seq = self.sched.active[slot]
+        if seq.n_generated == 1 and seq.req.req_id not in self.ttft:
+            t0 = self._t_added.get(seq.req.req_id)
+            if t0 is not None:
+                self.ttft[seq.req.req_id] = time.perf_counter() - t0
+
+    # -- the step ----------------------------------------------------------
+
+    def step(self) -> Tuple[StepPlan, List[Tuple[int, np.ndarray]]]:
+        """Run one engine step; returns (plan, finished) where finished is
+        a list of (req_id, generated token ids)."""
+        cfg = self.config
+        plan = self.sched.schedule()
+
+        # a re-admitted slot may have hosted another sequence: clear its
+        # recurrent (SSM) state before the first prefill chunk touches it
+        for slot in plan.admitted:
+            self.cache = self.model.stack.reset_slot_state(self.cache,
+                                                           slot)
+
+        for slot, start, toks in plan.prefills:
+            pt = self.sched.state.page_table[slot][None]
+            logits, self.cache = self._step(
+                self.params, self.cache, pt,
+                jnp.asarray(toks[None]),
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([len(toks)], jnp.int32),
+                jnp.asarray([slot], jnp.int32))
+            self.sched.advance_prefill(slot, len(toks))
+            seq = self.sched.active[slot]
+            if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
+                # prompt fully cached and no pending token yet (also true
+                # right after a preemption recompute): sample the next one
+                self.sched.append_token(slot, self._sample(logits[0, 0],
+                                                           slot))
+                self._emit(slot)
+
+        if plan.decode_slots:
+            slots = cfg.max_slots
+            tokens = np.zeros((slots, 1), np.int32)
+            n_new = np.zeros((slots,), np.int32)
+            for s in plan.decode_slots:
+                tokens[s, 0] = self.sched.active[s].pending_token
+                n_new[s] = 1
+            logits, self.cache = self._step(
+                self.params, self.cache, self.sched.state.page_table,
+                jnp.asarray(tokens), self.sched.state.seq_lens,
+                jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+            greedy_toks = np.asarray(
+                jnp.argmax(logits[:, 0, :], axis=-1)) \
+                if cfg.greedy else None
+            for s in plan.decode_slots:
+                self.sched.note_decoded(s)
+                tok = int(greedy_toks[s]) if cfg.greedy \
+                    else self._sample(logits[s, 0], s)
+                self.sched.append_token(s, tok)
+                self._emit(s)
+
+        finished = []
+        for s in range(cfg.max_slots):
+            seq = self.sched.active[s]
+            if seq is not None and seq.done:
+                req, gen = self.sched.finish(s)
+                self.outputs[req.req_id] = gen
+                self._t_added.pop(req.req_id, None)
+                finished.append((req.req_id, gen))
+        return plan, finished
+
+    # -- drain loop --------------------------------------------------------
+
+    def run(self, prompts: Sequence, max_new_tokens,
+            max_steps: int = 100_000) -> List[np.ndarray]:
+        """Submit ``prompts`` (list of 1-D int arrays) and step until all
+        finish; returns generated ids per prompt, in submission order.
+        ``max_new_tokens`` is an int or a per-prompt list."""
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * len(prompts)
+        ids = [self.add_request(p, n)
+               for p, n in zip(prompts, max_new_tokens)]
+        steps = 0
+        while self.sched.has_work():
+            plan, _ = self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine failed to drain (stuck plan?)")
+            if plan.n_tokens == 0 and not plan.admitted:
+                raise RuntimeError(
+                    "scheduler produced an empty plan with work pending — "
+                    "page pool too small for any resident sequence")
+        # pop: a long-lived engine must not hold every generation forever
+        # (``ttft`` is per-run telemetry — callers that aggregate across
+        # runs read it between ``run()`` calls and may clear it)
+        return [self.outputs.pop(i) for i in ids]

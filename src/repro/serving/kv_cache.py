@@ -1,0 +1,171 @@
+"""Paged KV cache: fixed-size pages, free-list allocator, jnp page tables.
+
+The serving analog of the paper's junction time-multiplexing: a fixed pool
+of ``total_pages`` KV pages (fixed hardware) serves sequences of any length
+by mapping logical token positions to physical pages through per-sequence
+page tables. All state lives in jnp arrays and every operation is a pure
+function ``PageState -> PageState``, so the allocator can run inside or
+outside ``jit`` (page counts per call are compile-time static, mirroring
+the paper's compile-time-static sparsity patterns).
+
+Layout conventions shared with the model stack:
+
+* per-layer page buffers are ``(total_pages + 1, page_size, Hkv, Dh)`` —
+  the **last** page is a write-discard ("trash") page that absorbs writes
+  from inactive batch rows, so the jitted step never branches on activity;
+* ``page_table`` is ``(slots, max_pages_per_seq)`` int32 with ``-1`` for
+  unmapped entries; valid physical page ids are in ``[0, total_pages)``;
+* a sequence occupying ``n`` tokens owns pages ``0..ceil(n/page_size)-1``
+  of its table row, mapped in order — token position ``p`` lives at
+  ``(page_table[slot, p // page_size], p % page_size)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PageState:
+    """Allocator + mapping state for one page pool (all jnp arrays)."""
+
+    page_table: jax.Array  # (slots, max_pages_per_seq) int32, -1 = unmapped
+    n_pages: jax.Array     # (slots,) int32 — pages owned per slot
+    seq_lens: jax.Array    # (slots,) int32 — tokens written per slot
+    free_stack: jax.Array  # (total_pages,) int32 — free ids, top at count-1
+    free_count: jax.Array  # () int32
+
+    # -- pytree ------------------------------------------------------------
+
+    def tree_flatten(self):
+        return ((self.page_table, self.n_pages, self.seq_lens,
+                 self.free_stack, self.free_count), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    # -- host-side views ---------------------------------------------------
+
+    @property
+    def total_pages(self) -> int:
+        return self.free_stack.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.page_table.shape[0]
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+    def free(self) -> int:
+        """Host-side free-page count (forces a sync; scheduler use only)."""
+        return int(self.free_count)
+
+
+def init_page_state(slots: int, total_pages: int,
+                    max_pages_per_seq: int) -> PageState:
+    return PageState(
+        page_table=jnp.full((slots, max_pages_per_seq), -1, jnp.int32),
+        n_pages=jnp.zeros((slots,), jnp.int32),
+        seq_lens=jnp.zeros((slots,), jnp.int32),
+        free_stack=jnp.arange(total_pages, dtype=jnp.int32),
+        free_count=jnp.asarray(total_pages, jnp.int32),
+    )
+
+
+def alloc_pages(st: PageState, slot, n: int) -> PageState:
+    """Pop ``n`` pages (static count) from the free list onto ``slot``'s
+    table, appended after its currently-mapped pages. The caller (the
+    scheduler) must guarantee ``free_count >= n`` and that the row has
+    room; this function does not check (it must stay jit-traceable)."""
+    if n == 0:
+        return st
+    ids = jax.lax.dynamic_slice(st.free_stack, (st.free_count - n,), (n,))
+    row = jax.lax.dynamic_slice(st.page_table, (slot, 0),
+                                (1, st.max_pages_per_seq))[0]
+    row = jax.lax.dynamic_update_slice(row, ids, (st.n_pages[slot],))
+    table = jax.lax.dynamic_update_slice(st.page_table, row[None],
+                                         (slot, 0))
+    return dataclasses.replace(
+        st, page_table=table,
+        n_pages=st.n_pages.at[slot].add(n),
+        free_count=st.free_count - n)
+
+
+def free_slot(st: PageState, slot) -> PageState:
+    """Return all of ``slot``'s pages to the free list and clear its row."""
+    m = st.max_pages_per_seq
+    row = st.page_table[slot]                          # (m,)
+    owned = jnp.arange(m) < st.n_pages[slot]
+    # push owned ids above the current top; masked entries index OOB and
+    # are dropped by the scatter
+    dst = jnp.where(owned, st.free_count + jnp.arange(m), st.total_pages)
+    stack = st.free_stack.at[dst].set(jnp.where(owned, row, 0),
+                                      mode="drop")
+    return dataclasses.replace(
+        st,
+        page_table=st.page_table.at[slot].set(-1),
+        n_pages=st.n_pages.at[slot].set(0),
+        seq_lens=st.seq_lens.at[slot].set(0),
+        free_stack=stack,
+        free_count=st.free_count + st.n_pages[slot])
+
+
+def advance(st: PageState, slot, n_tokens: int) -> PageState:
+    """Record ``n_tokens`` more tokens written for ``slot``."""
+    return dataclasses.replace(
+        st, seq_lens=st.seq_lens.at[slot].add(n_tokens))
+
+
+def pages_needed(seq_len: int, page_size: int) -> int:
+    return -(-seq_len // page_size)
+
+
+# ---------------------------------------------------------------------------
+# Address translation + page buffer I/O (used by the model's paged path)
+# ---------------------------------------------------------------------------
+
+
+def physical_addresses(page_table: jax.Array,   # (B, max_pages)
+                       positions: jax.Array,    # (B, C) token positions
+                       valid: jax.Array,        # (B, C) bool
+                       page_size: int,
+                       trash_page: int) -> Tuple[jax.Array, jax.Array]:
+    """Map token positions to (physical_page, offset); invalid rows are
+    redirected to the write-discard page."""
+    logical = jnp.clip(positions // page_size, 0,
+                       page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical, axis=1)
+    phys = jnp.where(valid & (phys >= 0), phys, trash_page)
+    return phys, positions % page_size
+
+
+def write_kv(k_pages: jax.Array,  # (P+1, page, Hkv, Dh)
+             v_pages: jax.Array,
+             k_new: jax.Array,    # (B, C, Hkv, Dh)
+             v_new: jax.Array,
+             phys: jax.Array,     # (B, C)
+             off: jax.Array       # (B, C)
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter new KV into the page buffers (batched token writes)."""
+    k_pages = k_pages.at[phys, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def gather_kv(pages: jax.Array,       # (P+1, page, Hkv, Dh)
+              page_table: jax.Array   # (B, max_pages)
+              ) -> jax.Array:
+    """Gather a contiguous (B, max_pages*page, Hkv, Dh) logical view of a
+    batch of sequences (the XLA fallback read path). Unmapped entries
+    (-1) are clamped to page 0; the caller masks them by sequence length."""
+    b, m = page_table.shape
+    _, page, hkv, dh = pages.shape
+    flat = pages[jnp.clip(page_table, 0, pages.shape[0] - 1)]
+    return flat.reshape(b, m * page, hkv, dh)

@@ -1,0 +1,337 @@
+"""Continuous-batching scheduler: admit / evict / preempt + chunked prefill.
+
+The scheduler is the software analog of the paper's flexible degree of
+parallelism ``z``: a fixed per-step **token budget** is time-multiplexed
+over however many requests are in flight, exactly as the FPGA's ``z``
+multiply-accumulate lanes are time-multiplexed over a junction of any
+size. Knob mapping (see README/ROADMAP):
+
+* ``token_budget``  <->  ``z`` (work issued per hardware cycle / step)
+* ``page_size``     <->  junction sub-block granularity (the unit of
+  storage allocation; smaller = less fragmentation, more table walks)
+* ``max_slots``     <->  pipeline depth (concurrent sequences resident)
+
+Policy (deliberately simple, latency-first):
+
+1. **decode first** — every running, fully-prefilled sequence gets one
+   token of budget per step (continuous batching: decode never waits for
+   a long prompt to finish prefilling);
+2. **chunked prefill** fills the remaining budget, one sequence at a
+   time, oldest first, in power-of-two chunks (``1,2,4,..,prefill_chunk``)
+   so the jitted chunk function compiles O(log chunk) variants;
+3. **admission** when a slot and at least one page are free;
+4. **preemption** when a page allocation fails: the *youngest* running
+   sequence is evicted (its pages freed) and re-queued for full
+   recompute with its generated tokens folded into the prompt — the
+   vLLM recompute-preemption policy.
+
+All page accounting goes through ``kv_cache.PageState`` — the scheduler
+is the single owner of the allocator, and the property tests drive this
+class directly to certify no page leaks or double-frees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from . import kv_cache
+from .kv_cache import PageState
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (prompt token ids + a budget of new tokens)."""
+    req_id: int
+    prompt: np.ndarray            # (L,) int32 token ids
+    max_new_tokens: int
+    # original prompt length; after recompute-preemption the working
+    # prompt grows to include already-generated tokens, but outputs are
+    # reported relative to this
+    orig_prompt_len: int = -1
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.orig_prompt_len < 0:
+            self.orig_prompt_len = len(self.prompt)
+
+
+@dataclasses.dataclass
+class ActiveSeq:
+    """A request resident in a slot."""
+    req: Request
+    admit_order: int
+    tokens: List[int]             # prompt + generated (grows during decode)
+    n_prefilled: int = 0          # tokens whose KV is written to pages
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.req.prompt)
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens) - self.req.orig_prompt_len
+
+    @property
+    def prefilling(self) -> bool:
+        return self.n_prefilled < self.prompt_len
+
+    @property
+    def pending_token(self) -> int:
+        """The sampled-but-not-yet-cached token fed to the next decode."""
+        return self.tokens[self.n_prefilled]
+
+    @property
+    def done(self) -> bool:
+        return (not self.prefilling
+                and self.n_generated >= self.req.max_new_tokens)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What one engine step should execute."""
+    decode_slots: List[int]
+    # (slot, start_position, chunk_tokens) — chunk lengths are powers of two
+    prefills: List[Tuple[int, int, np.ndarray]]
+    admitted: List[int] = dataclasses.field(default_factory=list)
+    preempted: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.decode_slots) + sum(len(c) for _, _, c in
+                                            self.prefills)
+
+
+def _pow2_chunk(n: int, cap: int) -> int:
+    """Largest power of two <= min(n, cap) (n, cap >= 1)."""
+    m = min(n, cap)
+    return 1 << (m.bit_length() - 1)
+
+
+class Scheduler:
+    """Owns the slot map and the page allocator; emits per-step plans."""
+
+    def __init__(self, *, slots: int, total_pages: int, page_size: int,
+                 max_pages_per_seq: int, token_budget: int,
+                 prefill_chunk: int):
+        if prefill_chunk < 1 or token_budget < 1:
+            raise ValueError("prefill_chunk and token_budget must be >= 1")
+        self.page_size = page_size
+        self.token_budget = token_budget
+        self.prefill_chunk = prefill_chunk
+        self.state: PageState = kv_cache.init_page_state(
+            slots, total_pages, max_pages_per_seq)
+        self.waiting: Deque[Request] = deque()
+        self.active: List[Optional[ActiveSeq]] = [None] * slots
+        self._admit_counter = 0
+        self.stats = {"admitted": 0, "preempted": 0, "finished": 0,
+                      "steps": 0}
+        # host-side mirrors of the PageState counters: every read on the
+        # per-token scheduling path uses these (a device sync per read
+        # would put O(slots) round-trips on the decode hot path); the jnp
+        # state stays authoritative for the jitted step and the mirrors
+        # are asserted against it in check_invariants()
+        self._free = total_pages
+        self._n_pages = [0] * slots
+        self._seq_lens = [0] * slots
+
+    # -- bookkeeping the engine reports back ------------------------------
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(
+            s is not None for s in self.active)
+
+    def advance_prefill(self, slot: int, n: int) -> None:
+        seq = self.active[slot]
+        seq.n_prefilled += n
+        self.state = kv_cache.advance(self.state, slot, n)
+        self._seq_lens[slot] += n
+
+    def append_token(self, slot: int, token: int) -> None:
+        """Record a sampled token (after prefill completes or a decode)."""
+        self.active[slot].tokens.append(int(token))
+
+    def note_decoded(self, slot: int) -> None:
+        """A decode step wrote the pending token's KV at position
+        ``n_prefilled``."""
+        seq = self.active[slot]
+        seq.n_prefilled += 1
+        self.state = kv_cache.advance(self.state, slot, 1)
+        self._seq_lens[slot] += 1
+
+    def finish(self, slot: int) -> Tuple[Request, np.ndarray]:
+        """Release the slot; returns (request, generated token ids)."""
+        seq = self.active[slot]
+        self.state = kv_cache.free_slot(self.state, slot)
+        self._release_mirror(slot)
+        self.active[slot] = None
+        self.stats["finished"] += 1
+        out = np.asarray(seq.tokens[seq.req.orig_prompt_len:], np.int32)
+        return seq.req, out
+
+    # -- page helpers -----------------------------------------------------
+
+    def _release_mirror(self, slot: int) -> None:
+        self._free += self._n_pages[slot]
+        self._n_pages[slot] = 0
+        self._seq_lens[slot] = 0
+
+    def _pages_for(self, slot: int, new_len: int) -> int:
+        """Additional pages needed for ``slot`` to hold ``new_len`` tokens."""
+        have = self._n_pages[slot]
+        return max(0, kv_cache.pages_needed(new_len, self.page_size) - have)
+
+    def _try_alloc(self, slot: int, need: int,
+                   protected: set, preempted: List[int]) -> bool:
+        """Allocate ``need`` pages for ``slot``, preempting younger,
+        unprotected sequences if the pool is exhausted."""
+        if self._n_pages[slot] + need > self.state.max_pages_per_seq:
+            raise RuntimeError(
+                f"slot {slot} exceeds max_pages_per_seq="
+                f"{self.state.max_pages_per_seq}")
+        while self._free < need:
+            victim = self._youngest_victim(exclude=protected | {slot})
+            if victim is None:
+                return False
+            self._preempt(victim)
+            preempted.append(victim)
+        if need:
+            self.state = kv_cache.alloc_pages(self.state, slot, need)
+            self._free -= need
+            self._n_pages[slot] += need
+        return True
+
+    def _youngest_victim(self, exclude: set) -> Optional[int]:
+        cands = [(s.admit_order, i) for i, s in enumerate(self.active)
+                 if s is not None and i not in exclude]
+        return max(cands)[1] if cands else None
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` for recompute: its pages go back to the pool and
+        the request is re-queued (front) with generated tokens folded into
+        the prompt, so no sampled output is lost."""
+        seq = self.active[slot]
+        self.state = kv_cache.free_slot(self.state, slot)
+        self._release_mirror(slot)
+        self.active[slot] = None
+        # max_new_tokens stays the *original* budget: n_generated keeps
+        # counting from orig_prompt_len, so already-generated tokens now
+        # living in the recompute prompt still count toward it
+        self.waiting.appendleft(Request(
+            req_id=seq.req.req_id,
+            prompt=np.asarray(seq.tokens, np.int32),
+            max_new_tokens=seq.req.max_new_tokens,
+            orig_prompt_len=seq.req.orig_prompt_len))
+        self.stats["preempted"] += 1
+
+    # -- the step plan ----------------------------------------------------
+
+    def schedule(self) -> StepPlan:
+        plan = StepPlan(decode_slots=[], prefills=[])
+        budget = self.token_budget
+        self.stats["steps"] += 1
+
+        # 1) admissions: empty slots + at least one free page each
+        free_slots = [i for i, s in enumerate(self.active) if s is None]
+        while self.waiting and free_slots and \
+                self._free > len(plan.admitted):
+            slot = free_slots.pop(0)
+            req = self.waiting.popleft()
+            self.active[slot] = ActiveSeq(
+                req=req, admit_order=self._admit_counter,
+                tokens=list(map(int, req.prompt)))
+            self._admit_counter += 1
+            self.stats["admitted"] += 1
+            plan.admitted.append(slot)
+
+        # 2) decode: every running fully-prefilled sequence, one token each
+        protected: set = set()
+        decode_slots = sorted(
+            (s.admit_order, i) for i, s in enumerate(self.active)
+            if s is not None and not s.prefilling and not s.done)
+        for _, slot in decode_slots:
+            if budget <= 0:
+                break
+            seq = self.active[slot]
+            if seq is None:          # preempted by an earlier allocation
+                continue
+            need = self._pages_for(slot, seq.n_prefilled + 1)
+            if not self._try_alloc(slot, need, protected, plan.preempted):
+                continue             # pool exhausted even after preemption
+            plan.decode_slots.append(slot)
+            protected.add(slot)
+            budget -= 1
+
+        # 3) chunked prefill with the remaining budget, oldest first
+        prefillers = sorted(
+            (s.admit_order, i) for i, s in enumerate(self.active)
+            if s is not None and s.prefilling)
+        for _, slot in prefillers:
+            if budget <= 0:
+                break
+            seq = self.active[slot]
+            if seq is None:
+                continue
+            remaining = seq.prompt_len - seq.n_prefilled
+            chunk = _pow2_chunk(remaining, min(budget, self.prefill_chunk))
+            need = self._pages_for(slot, seq.n_prefilled + chunk)
+            while chunk > 1 and not self._can_fit(slot, need, protected):
+                chunk //= 2
+                need = self._pages_for(slot, seq.n_prefilled + chunk)
+            if not self._try_alloc(slot, need, protected, plan.preempted):
+                continue
+            # _try_alloc never preempts `slot` itself (it is excluded from
+            # victim selection), so the sequence must still be resident
+            assert self.active[slot] is seq
+            start = seq.n_prefilled
+            toks = np.asarray(seq.tokens[start:start + chunk], np.int32)
+            plan.prefills.append((slot, start, toks))
+            protected.add(slot)
+            budget -= chunk
+
+        return plan
+
+    def _can_fit(self, slot: int, need: int, protected: set) -> bool:
+        """Would ``need`` pages fit, counting preemptible victims' pages?"""
+        avail = self._free
+        for i, s in enumerate(self.active):
+            if s is not None and i not in protected and i != slot:
+                avail += self._n_pages[i]
+        return avail >= need
+
+    # -- invariant check (used by the property tests) ----------------------
+
+    def check_invariants(self) -> None:
+        st = self.state
+        total = st.total_pages
+        free_n = st.free()
+        # host mirrors must agree with the device-side allocator state
+        assert free_n == self._free, \
+            f"free mirror diverged: host={self._free} device={free_n}"
+        assert list(np.asarray(st.n_pages)) == self._n_pages, \
+            "n_pages mirror diverged"
+        assert list(np.asarray(st.seq_lens)) == self._seq_lens, \
+            "seq_lens mirror diverged"
+        owned = int(np.sum(np.asarray(st.n_pages)))
+        assert free_n + owned == total, \
+            f"page leak: free={free_n} owned={owned} total={total}"
+        seen: set = set(np.asarray(st.free_stack)[:free_n].tolist())
+        assert len(seen) == free_n, "duplicate ids on the free stack"
+        table = np.asarray(st.page_table)
+        n_pages = np.asarray(st.n_pages)
+        for i in range(st.slots):
+            row = table[i][:n_pages[i]]
+            assert (row >= 0).all() and (row < total).all(), \
+                f"slot {i} maps invalid pages {row}"
+            for p in row.tolist():
+                assert p not in seen, f"page {p} double-mapped"
+                seen.add(p)
+            assert (table[i][n_pages[i]:] == -1).all(), \
+                f"slot {i} has mapped pages beyond n_pages"
+            assert int(st.seq_lens[i]) <= int(n_pages[i]) * self.page_size
+        assert seen == set(range(total)), "pages lost from the pool"
