@@ -1,5 +1,15 @@
 """Timed micro-benchmarks: the CSD-SpMM sparse junction vs dense matmul.
 
+Standalone CLI (the CI sharded job uses it)::
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --quick --sharded \
+        --devices 8 --json kernel-sharded-bench.json
+
+``--devices N`` forces N host devices (must run before any jax init, so
+only valid through this CLI, not ``benchmarks.run``'s in-process calls);
+``--sharded`` times the model-parallel junction path per density next to
+the single-device path; ``--json`` dumps the emitted rows.
+
 Wall-clock on this host CPU (XLA path; the Pallas path targets TPU), at
 several densities. ``derived`` reports the speedup over dense and the
 effective GFLOP/s. The paper's complexity claim (compute scales with |W|)
@@ -16,6 +26,29 @@ of the in-kernel epilogue only exists on the Pallas/TPU path, where the
 pre-activation never leaves VMEM.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+def _sniff_devices(argv):
+    """Pre-argparse --devices extraction (both `--devices 8` and
+    `--devices=8`) — must run before the first jax import, which locks
+    the XLA device count."""
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+if __name__ == "__main__":
+    _n = _sniff_devices(sys.argv)
+    if _n:
+        # append: an exported XLA_FLAGS must not silently veto the forcing
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={_n}").strip()
 
 import jax
 import jax.numpy as jnp
@@ -150,3 +183,82 @@ def run_batched(E: int = 8, d: int = 512, d_e: int = 1024, c: int = 256):
         t_ss = time_call(ss, w, xe)
         emit(f"kernel/moe_batched_step_rho{rho}", t_ss,
              f"speedup_vs_dense={t_sdense / t_ss:.2f}x")
+
+
+def run_sharded(quick: bool = True, n_in: int = 1024, n_out: int = 4096,
+                m: int = 256):
+    """Model-parallel junction throughput per density vs the single-device
+    path, on however many (host) devices the process sees.
+
+    On forced host devices all "shards" share one CPU so the timings
+    measure partition/collective overhead, not speedup; on a real mesh
+    the same rows track the tensor-parallel scaling of the junction. The
+    shard axis size plays the paper's flexible ``z``: k devices = k
+    block-row ranges processed per step.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        emit("kernel/sharded_skipped", 0.0, f"devices={n_dev}")
+        return
+    mesh = jax.make_mesh((n_dev,), ("model",))
+    x = jax.random.normal(jax.random.key(0), (m, n_in))
+    densities = (0.25,) if quick else (0.5, 0.25, 0.125)
+    for rho in densities:
+        bp = make_block_pattern(n_in, n_out, rho, block_in=128,
+                                block_out=128, seed=0)
+        if bp.n_rb % n_dev:
+            emit(f"kernel/sharded_csd_rho{rho}", 0.0,
+                 f"skipped_n_rb{bp.n_rb}_ndev{n_dev}")
+            continue
+        w = jax.random.normal(
+            jax.random.key(2), (bp.n_rb, bp.d_in_b, 128, 128)) * 0.02
+        f1 = jax.jit(lambda x, w, bp=bp: ops.csd_matmul(
+            x, w, bp, backend="xla"))
+        fk = jax.jit(lambda x, w, bp=bp: ops.csd_matmul(
+            x, w, bp, backend="xla", mesh=mesh, axis="model"))
+        t1 = time_call(f1, x, w)
+        tk = time_call(fk, x, w)
+        flops = 2 * m * bp.n_weight_elems
+        emit(f"kernel/sharded_csd_rho{rho}", tk,
+             f"single_us={t1:.2f};gflops={flops / (tk * 1e-6) / 1e9:.1f};"
+             f"devices={n_dev}")
+
+        def step1(w, x, bp=bp):
+            return jnp.mean(ops.csd_matmul(x, w, bp, backend="xla") ** 2)
+
+        def stepk(w, x, bp=bp):
+            return jnp.mean(ops.csd_matmul(
+                x, w, bp, backend="xla", mesh=mesh, axis="model") ** 2)
+
+        ts1 = time_call(jax.jit(jax.value_and_grad(step1)), w, x)
+        tsk = time_call(jax.jit(jax.value_and_grad(stepk)), w, x)
+        emit(f"kernel/sharded_step_rho{rho}", tsk,
+             f"single_us={ts1:.2f};devices={n_dev}")
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    from .common import ROWS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (handled pre-jax-import)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.sharded:
+        run_sharded(quick=args.quick)
+    else:
+        run()
+    if args.json:
+        rows = [dict(zip(("name", "us_per_call", "derived"),
+                         r.split(",", 2))) for r in ROWS]
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (for kernel_sharded; must "
+                         "be set before the first jax import, which this "
+                         "harness does lazily inside main)")
     args = ap.parse_args()
+
+    if args.devices:
+        import os
+        # append: an exported XLA_FLAGS must not silently veto the forcing
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
 
     from . import (fig1_histograms, fig7_junction_density, fig9_large_sparse,
                    fig12_other_methods, kernel_bench, roofline,
@@ -39,10 +51,16 @@ def main() -> None:
         "fig9": lambda: fig9_large_sparse.run(epochs=ep or 10),
         "fig12": lambda: fig12_other_methods.run(epochs=ep or 10),
         "kernel": kernel_bench.run,
+        "kernel_sharded": lambda: kernel_bench.run_sharded(
+            quick=not args.full),
         "roofline": roofline.run,
         "serving": lambda: serving_bench.run(quick=not args.full),
     }
-    selected = (args.only.split(",") if args.only else list(benches))
+    # the sharded rows only mean something on a multi-device view — run
+    # them by default when --devices forces one, on request otherwise
+    selected = (args.only.split(",") if args.only else
+                [b for b in benches
+                 if b != "kernel_sharded" or args.devices])
 
     print("name,us_per_call,derived")
     failures = []

@@ -30,7 +30,9 @@ from .sparsity import (  # noqa: F401
     count_access_patterns,
 )
 from .block_pattern import (  # noqa: F401
-    BlockPattern, fit_block_pattern, make_block_pattern,
+    BlockPattern, PartitionedPattern, can_partition, fit_block_pattern,
+    make_block_pattern, merge_slab, partition_pattern, reassemble_outputs,
+    split_slab,
 )
 from .sparse_linear import (  # noqa: F401
     SparseLinear,

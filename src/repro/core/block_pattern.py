@@ -42,6 +42,13 @@ class BlockPattern:
     block_idx: np.ndarray  # (n_rb, d_in_b) int32 — gather form
     out_idx: np.ndarray    # (n_lb, d_out_b) int32 — scatter form: right block
     out_slot: np.ndarray   # (n_lb, d_out_b) int32 — scatter form: fan-in slot
+    # 0/1 validity of scatter-form entries, or None when every entry is
+    # real. Shard-local patterns (``partition_pattern``) have non-uniform
+    # out-degree and pad their scatter form to a fixed width; every
+    # scatter-form consumer (``kernels.ops``/``csd_spmm`` BP and scatter
+    # dataflow) honors this mask, so a shard pattern is a full citizen of
+    # the public ``csd_matmul`` API.
+    out_valid: Optional[np.ndarray] = None
     meta: dict = dataclasses.field(default_factory=dict, compare=False)
 
     @property
@@ -122,6 +129,207 @@ def make_block_pattern(
         out_slot=ridx[:, :, 1].astype(np.int32),
         meta=dict(pat.meta, method=pat.method, seed=seed),
     )
+
+
+# ---------------------------------------------------------------------------
+# Pattern partitioning — the jax_pallas analogue of the paper's flexible-z
+# hardware sizing. The FPGA processes a junction z block-rows at a time; a
+# mesh with a tensor axis of size k processes k disjoint block-row ranges
+# *simultaneously*, one range per device. Clash-freedom is a per-block-row
+# property, so any row-disjoint split preserves it shard-locally.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedPattern:
+    """A ``BlockPattern`` split into ``n_shards`` shard-local patterns over
+    disjoint output block-row ranges.
+
+    * ``shards[s]``      — shard-local ``BlockPattern`` (gather form indexes
+      the FULL left-block range: activations are feature-complete on every
+      device; only the *output* rows are partitioned);
+    * ``row_assign[rb]`` — owning shard of original block-row ``rb``;
+    * ``perm``           — original row ids in shard-major concatenation
+      order (shard 0's rows, then shard 1's, ...);
+    * ``inv_perm``       — inverse of ``perm``: ``y_logical_block[i] =
+      y_shard_major_block[inv_perm[i]]`` reassembles shard-major outputs
+      into the junction's logical feature order;
+    * ``out_idx/out_slot/out_valid`` (stacked, ``(n_shards, n_lb, d_loc)``)
+      — each shard's scatter form over *local* row ids, padded to the max
+      local out-degree; padding entries point at (0, 0) with ``out_valid ==
+      0`` so the BP kernels can zero their contribution.
+
+    Uniform-degree patterns (everything ``make_block_pattern`` produces)
+    are split into *contiguous* equal ranges: every row carries the same
+    slot count, so any equal split is slot-balanced, and contiguity makes
+    the shard-major layout coincide with the logical layout (``perm`` is
+    the identity) — the global weight slab can then be row-sharded by a
+    plain ``NamedSharding`` with zero data movement. The permutation
+    plumbing (``perm``/``inv_perm``, honored by the slab helpers and
+    ``reassemble_outputs``) carries a general assignment for future
+    variable-degree patterns.
+    """
+
+    parent: BlockPattern
+    n_shards: int
+    shards: tuple  # tuple[BlockPattern]
+    row_assign: np.ndarray   # (n_rb,) int32
+    perm: np.ndarray         # (n_rb,) int32, shard-major order
+    inv_perm: np.ndarray     # (n_rb,) int32
+    idx: np.ndarray          # (n_shards, n_rb_loc, d_in_b) int32 stacked
+    out_idx: np.ndarray      # (n_shards, n_lb, d_loc) int32 stacked
+    out_slot: np.ndarray     # (n_shards, n_lb, d_loc) int32 stacked
+    out_valid: np.ndarray    # (n_shards, n_lb, d_loc) int32 stacked 0/1
+
+    @property
+    def n_rb_local(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def contiguous(self) -> bool:
+        return bool((self.perm == np.arange(len(self.perm))).all())
+
+
+def _local_scatter(block_idx_local: np.ndarray, n_lb: int, d_loc: int):
+    """Scatter form of one shard's (n_rb_loc, d_in_b) gather pattern over
+    *local* row ids, padded to ``d_loc`` entries per left block."""
+    n_rb_loc, d_in_b = block_idx_local.shape
+    oidx = np.zeros((n_lb, d_loc), np.int32)
+    oslot = np.zeros((n_lb, d_loc), np.int32)
+    ovalid = np.zeros((n_lb, d_loc), np.int32)
+    fill = np.zeros(n_lb, np.int64)
+    for r in range(n_rb_loc):
+        for f in range(d_in_b):
+            lb = int(block_idx_local[r, f])
+            oidx[lb, fill[lb]] = r
+            oslot[lb, fill[lb]] = f
+            ovalid[lb, fill[lb]] = 1
+            fill[lb] += 1
+    return oidx, oslot, ovalid
+
+
+def partition_pattern(pattern: BlockPattern,
+                      axis_size: int) -> PartitionedPattern:
+    """Split ``pattern`` into ``axis_size`` shard-local patterns over
+    disjoint output block-row ranges, load-balanced by slot count.
+
+    Requires ``n_rb % axis_size == 0`` (every shard must run the same SPMD
+    program, so local shapes must match). Raises ``ValueError`` otherwise —
+    callers use :func:`can_partition` to gate the sharded path.
+    """
+    n_rb = pattern.n_rb
+    if axis_size < 1:
+        raise ValueError(f"axis_size must be >= 1, got {axis_size}")
+    if n_rb % axis_size:
+        raise ValueError(
+            f"pattern with n_rb={n_rb} block-rows cannot split over "
+            f"axis_size={axis_size} shards (SPMD needs equal local shapes)")
+    q = n_rb // axis_size
+    # every BlockPattern row carries exactly d_in_b slots (fixed-degree is
+    # structural: block_idx is a dense (n_rb, d_in_b) array), so contiguous
+    # equal ranges are already slot-balanced AND keep perm == identity —
+    # the global slab's NamedSharding row chunks are exactly the per-device
+    # slabs. A future variable-degree pattern would need a balanced
+    # assignment here; perm/inv_perm and the slab helpers already carry a
+    # general permutation for that day.
+    row_assign = np.repeat(np.arange(axis_size), q).astype(np.int32)
+    shard_rows = [np.flatnonzero(row_assign == s) for s in range(axis_size)]
+    perm = np.concatenate(shard_rows).astype(np.int32)
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(n_rb, dtype=np.int32)
+
+    idx_stk = np.stack([pattern.block_idx[rows] for rows in shard_rows])
+    d_loc = 0
+    for s in range(axis_size):
+        counts = np.bincount(idx_stk[s].reshape(-1), minlength=pattern.n_lb)
+        d_loc = max(d_loc, int(counts.max()))
+    oidx_l, oslot_l, ovalid_l, shards = [], [], [], []
+    for s in range(axis_size):
+        oi, os, ov = _local_scatter(idx_stk[s], pattern.n_lb, d_loc)
+        oidx_l.append(oi)
+        oslot_l.append(os)
+        ovalid_l.append(ov)
+        shards.append(BlockPattern(
+            n_in=pattern.n_in, n_out=q * pattern.block_out,
+            block_in=pattern.block_in, block_out=pattern.block_out,
+            block_idx=idx_stk[s].astype(np.int32),
+            out_idx=oi, out_slot=os, out_valid=ov,
+            meta=dict(pattern.meta, shard=s, of=axis_size,
+                      rows=shard_rows[s].tolist()),
+        ))
+    return PartitionedPattern(
+        parent=pattern, n_shards=axis_size, shards=tuple(shards),
+        row_assign=row_assign, perm=perm, inv_perm=inv_perm,
+        idx=idx_stk.astype(np.int32),
+        out_idx=np.stack(oidx_l), out_slot=np.stack(oslot_l),
+        out_valid=np.stack(ovalid_l))
+
+
+def can_partition(pattern: Optional[BlockPattern], axis_size: int) -> bool:
+    """True when the sharded junction path applies: a real pattern, more
+    than one shard, and equal per-shard block-row counts."""
+    return (pattern is not None and axis_size > 1
+            and pattern.n_rb % axis_size == 0
+            and pattern.n_rb >= axis_size)
+
+
+def _xp(a):
+    """numpy for numpy inputs, jax.numpy for jax arrays (host helpers —
+    not meant to run inside jit, but jit-safe for the jax branch)."""
+    if isinstance(a, np.ndarray):
+        return np
+    import jax.numpy as jnp
+    return jnp
+
+
+def split_slab(w, part: PartitionedPattern):
+    """Split a weight slab into per-shard slabs along the block-row dim.
+
+    4-D ``(n_rb, d_in_b, bL, bR)`` -> ``(n_shards, n_rb_loc, d_in_b, bL,
+    bR)``; 5-D expert slabs ``(E, n_rb, ...)`` -> ``(n_shards, E,
+    n_rb_loc, ...)``. Works on numpy or jax arrays (pure take/reshape).
+    """
+    xp = _xp(w)
+    rb_axis = 0 if w.ndim == 4 else 1
+    if w.shape[rb_axis] != len(part.perm):
+        raise ValueError(f"slab block-row dim {w.shape[rb_axis]} != "
+                         f"pattern n_rb {len(part.perm)}")
+    wp = xp.take(w, part.perm, axis=rb_axis)
+    q = part.n_rb_local
+    if w.ndim == 4:
+        return wp.reshape((part.n_shards, q) + w.shape[1:])
+    # (E, n_rb, d, bL, bR): shard-major leading dim so shards stay
+    # addressable as ws[s]
+    wp = wp.reshape((w.shape[0], part.n_shards, q) + w.shape[2:])
+    return xp.moveaxis(wp, 1, 0)
+
+
+def merge_slab(ws, part: PartitionedPattern):
+    """Inverse of :func:`split_slab`: per-shard slabs back to the logical
+    block-row order."""
+    xp = _xp(ws)
+    if ws.ndim == 5:  # (k, n_rb_loc, d, bL, bR)
+        flat = ws.reshape((-1,) + ws.shape[2:])
+        return xp.take(flat, part.inv_perm, axis=0)
+    # (k, E, n_rb_loc, d, bL, bR)
+    sw = xp.moveaxis(ws, 0, 1)
+    flat = sw.reshape((sw.shape[0], -1) + sw.shape[3:])
+    return xp.take(flat, part.inv_perm, axis=1)
+
+
+def reassemble_outputs(y, part: PartitionedPattern):
+    """Reorder a shard-major feature axis back to logical feature order.
+
+    ``y``: (..., n_out) with output blocks concatenated shard-major.
+    No-op (returns ``y``) for contiguous partitions.
+    """
+    if part.contiguous:
+        return y
+    xp = _xp(y)
+    br = part.parent.block_out
+    yb = y.reshape(y.shape[:-1] + (len(part.perm), br))
+    yb = xp.take(yb, part.inv_perm, axis=-2)
+    return yb.reshape(y.shape)
 
 
 def shrink_to_divisor(dim: int, block: int) -> int:

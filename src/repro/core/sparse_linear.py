@@ -144,12 +144,23 @@ class SparseLinear:
         b = params["b"] if s.use_bias else None
         if self._mode in ("block_gather", "block_scatter"):
             # the single accelerated junction path (tentpole): bias +
-            # activation fused into the kernel epilogue.
+            # activation fused into the kernel epilogue. Under a mesh
+            # whose rules resolve the "slab" axis the junction runs
+            # model-parallel. Layering note: the mesh/rules context lives
+            # in nn.common (core sits below nn), so the import is lazy —
+            # at call time only, and only to read runtime state.
+            from ..nn.common import junction_shard_kwargs, logical_to_spec
+            kw = junction_shard_kwargs(self.pattern)
+            if kw:
+                # keep the batch dim's data sharding through the shard_map
+                # entry (same wiring as nn.layers.Linear)
+                kw["lead_spec"] = tuple(logical_to_spec(
+                    *(("batch",) + (None,) * (x.ndim - 2))))
             return kops.csd_matmul(
                 x, w, self.pattern, bias=b, activation=activation,
                 backend="auto",
                 dataflow="scatter" if self._mode == "block_scatter"
-                else "gather")
+                else "gather", **kw)
         if self._mode == "dense":
             y = x @ w
         elif self._mode == "mask":

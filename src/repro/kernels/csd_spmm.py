@@ -82,6 +82,31 @@ def apply_activation(z: jax.Array, activation: Optional[str]) -> jax.Array:
     raise ValueError(f"unsupported fused activation {activation!r}")
 
 
+def mask_cotangent(dy: jax.Array, aux: jax.Array,
+                   activation: Optional[str]) -> jax.Array:
+    """Fused-epilogue backward: fold the activation derivative into the
+    cotangent. ``aux`` is the saved output ``y`` for relu (its sign IS the
+    mask) and the saved pre-activation ``z`` for gelu. Pure jnp, so the
+    same definition runs inside the Pallas BP/UP kernel bodies (the fused
+    backward epilogue — the cotangent never round-trips HBM unmasked) and
+    on host-side tiles in tests."""
+    if activation is None:
+        return dy
+    if activation == "relu":
+        return dy * (aux > 0).astype(dy.dtype)
+    if activation == "gelu":
+        # analytic derivative of the tanh approximation — matches what
+        # jax.vjp derives for jax.nn.gelu(approximate=True) to rounding
+        z = aux.astype(jnp.float32)
+        c = np.float32(np.sqrt(2.0 / np.pi))
+        a = np.float32(0.044715)
+        t = jnp.tanh(c * (z + a * z * z * z))
+        g = 0.5 * (1.0 + t) \
+            + 0.5 * z * (1.0 - t * t) * c * (1.0 + 3.0 * a * z * z)
+        return (dy.astype(jnp.float32) * g).astype(dy.dtype)
+    raise ValueError(f"unsupported fused activation {activation!r}")
+
+
 def _fwd_kernel(idx_ref, *refs, d_in_b: int, activation: Optional[str],
                 has_bias: bool, save_preact: bool):
     """refs: x, w, [bias], y, [preact] (inputs then outputs)."""
@@ -286,224 +311,276 @@ def csd_spmm_fwd(
 # ---------------------------------------------------------------------------
 # Backward-data: dx[m, lb] = sum_g dy[m, out_idx[lb, g]] @ w[out_idx, out_slot].T
 # (eq. (3b): the transpose pattern is itself structured — degrees swap)
+#
+# Fused backward epilogue: when ``activation`` is given, the cotangent is
+# masked (``mask_cotangent``) tile-by-tile INSIDE the kernel from the saved
+# ``aux`` (y for relu, pre-activation for gelu) — the unmasked dy is read
+# straight from HBM and never materialized masked.
+#
+# ``out_valid`` (same shape as out_idx, 0/1) marks padded scatter entries:
+# shard-local transpose patterns have non-uniform out-degree and are padded
+# to a fixed d_loc; padded entries contribute zero.
 # ---------------------------------------------------------------------------
 
 
-def _dx_kernel(oidx_ref, oslot_ref, dy_ref, w_ref, dx_ref):
-    g = pl.program_id(2)
+def _dx_kernel(*refs, batched: bool, has_valid: bool,
+               activation: Optional[str]):
+    ns = 3 if has_valid else 2
+    scalar_refs, rest = refs[:ns], refs[ns:]
+    ovalid_ref = scalar_refs[2] if has_valid else None
+    if activation is not None:
+        dy_ref, aux_ref, w_ref, dx_ref = rest
+    else:
+        (dy_ref, w_ref, dx_ref), aux_ref = rest, None
+    base = 1 if batched else 0
+    l = pl.program_id(base + 1)
+    g = pl.program_id(base + 2)
 
     @pl.when(g == 0)
     def _init():
         dx_ref[...] = jnp.zeros_like(dx_ref)
 
-    dy = dy_ref[...]  # (block_m, bR)
-    w = w_ref[0, 0]  # (bL, bR)
-    dx_ref[...] += jax.lax.dot_general(
+    def tile(ref):
+        return ref[0] if batched else ref[...]
+
+    dy = tile(dy_ref)  # (block_m, bR)
+    if activation is not None:
+        dy = mask_cotangent(dy, tile(aux_ref), activation)
+    w = w_ref[0, 0, 0] if batched else w_ref[0, 0]  # (bL, bR)
+    contrib = jax.lax.dot_general(
         dy, w, (((1,), (1,)), ((), ())),
         preferred_element_type=dx_ref.dtype)
-
-
-def _dx_kernel_batched(oidx_ref, oslot_ref, dy_ref, w_ref, dx_ref):
-    g = pl.program_id(3)
-
-    @pl.when(g == 0)
-    def _init():
-        dx_ref[...] = jnp.zeros_like(dx_ref)
-
-    dy = dy_ref[0]  # (block_m, bR)
-    w = w_ref[0, 0, 0]  # (bL, bR)
-    dx_ref[0] += jax.lax.dot_general(
-        dy, w, (((1,), (1,)), ((), ())),
-        preferred_element_type=dx_ref.dtype)
-
-
-def _csd_spmm_dx_batched(dy, w, out_idx, out_slot, *, block_m, interpret):
-    e, m, _ = dy.shape
-    _, n_rb, d_in_b, bl, br = w.shape
-    n_lb, d_out_b = out_idx.shape
-    if m % block_m:
-        raise ValueError(f"M={m} not divisible by block_m={block_m}")
-    acc_dtype = jnp.float32 if dy.dtype in (jnp.bfloat16, jnp.float32) else dy.dtype
-
-    grid = (e, m // block_m, n_lb, d_out_b)
-    dx = pl.pallas_call(
-        _dx_kernel_batched,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, block_m, br),
-                             lambda e, i, l, g, oidx, oslot:
-                             (e, i, oidx[l, g])),
-                pl.BlockSpec((1, 1, 1, bl, br),
-                             lambda e, i, l, g, oidx, oslot:
-                             (e, oidx[l, g], oslot[l, g], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, block_m, bl),
-                                   lambda e, i, l, g, oidx, oslot:
-                                   (e, i, l)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((e, m, n_lb * bl), acc_dtype),
-        interpret=interpret,
-    )(jnp.asarray(out_idx, jnp.int32), jnp.asarray(out_slot, jnp.int32),
-      dy, w)
-    return dx.astype(dy.dtype)
+    if has_valid:
+        contrib = contrib * ovalid_ref[l, g].astype(contrib.dtype)
+    if batched:
+        dx_ref[0] += contrib
+    else:
+        dx_ref[...] += contrib
 
 
 def csd_spmm_dx(
     dy: jax.Array,
     w: jax.Array,
-    out_idx: np.ndarray,
-    out_slot: np.ndarray,
+    out_idx,
+    out_slot,
     *,
+    out_valid=None,
+    aux: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
     block_m: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
     """dx: (M, n_in). dy: (M, n_rb*bR); the scatter pattern arrays come from
-    ``BlockPattern.out_idx/out_slot`` (reverse adjacency). Batched form:
-    dy (E, M, n_rb*bR), w (E, n_rb, d_in_b, bL, bR) -> dx (E, M, n_in)."""
-    if w.ndim == 5:
-        return _csd_spmm_dx_batched(dy, w, out_idx, out_slot,
-                                    block_m=block_m, interpret=interpret)
-    m, _ = dy.shape
-    n_rb, d_in_b, bl, br = w.shape
+    ``BlockPattern.out_idx/out_slot`` (reverse adjacency) and may be traced
+    jnp arrays (the sharded path selects them per-device). Batched form:
+    dy (E, M, n_rb*bR), w (E, n_rb, d_in_b, bL, bR) -> dx (E, M, n_in).
+
+    ``aux``/``activation`` select the fused backward epilogue (cotangent
+    masked in-kernel); ``out_valid`` zeroes padded scatter entries."""
+    batched = w.ndim == 5
+    if batched:
+        e, m, _ = dy.shape
+        _, n_rb, d_in_b, bl, br = w.shape
+    else:
+        m, _ = dy.shape
+        n_rb, d_in_b, bl, br = w.shape
     n_lb, d_out_b = out_idx.shape
     if m % block_m:
         raise ValueError(f"M={m} not divisible by block_m={block_m}")
     acc_dtype = jnp.float32 if dy.dtype in (jnp.bfloat16, jnp.float32) else dy.dtype
 
-    grid = (m // block_m, n_lb, d_out_b)
+    has_valid = out_valid is not None
+    ns = 3 if has_valid else 2
+
+    def imap(fn):
+        # index maps receive (grid..., *scalar_refs); ``*s`` absorbs the
+        # optional ovalid ref so one lambda serves both arities
+        if batched:
+            return (lambda e_, i, l, g, oidx, oslot, *s: fn(
+                (e_,), i, l, g, oidx, oslot))
+        return (lambda i, l, g, oidx, oslot, *s: fn(
+            (), i, l, g, oidx, oslot))
+
+    dy_map = imap(lambda e_, i, l, g, oidx, oslot: e_ + (i, oidx[l, g]))
+    w_map = imap(lambda e_, i, l, g, oidx, oslot:
+                 e_ + (oidx[l, g], oslot[l, g], 0, 0))
+    dx_map = imap(lambda e_, i, l, g, oidx, oslot: e_ + (i, l))
+
+    one = (1,) if batched else ()
+    dy_spec = pl.BlockSpec(one + (block_m, br), dy_map)
+    in_specs = [dy_spec]
+    operands = [jnp.asarray(out_idx, jnp.int32),
+                jnp.asarray(out_slot, jnp.int32)]
+    if has_valid:
+        operands.append(jnp.asarray(out_valid, jnp.int32))
+    operands.append(dy)
+    if activation is not None:
+        if aux is None:
+            raise ValueError("fused backward epilogue needs aux")
+        in_specs.append(dy_spec)
+        operands.append(aux)
+    in_specs.append(pl.BlockSpec(one + (1, 1, bl, br), w_map))
+    operands.append(w)
+
+    grid = ((e,) if batched else ()) + (m // block_m, n_lb, d_out_b)
+    out_shape = jax.ShapeDtypeStruct(
+        ((e,) if batched else ()) + (m, n_lb * bl), acc_dtype)
+    kernel = functools.partial(_dx_kernel, batched=batched,
+                               has_valid=has_valid, activation=activation)
     dx = pl.pallas_call(
-        _dx_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=ns,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_m, br),
-                             lambda i, l, g, oidx, oslot: (i, oidx[l, g])),
-                pl.BlockSpec((1, 1, bl, br),
-                             lambda i, l, g, oidx, oslot:
-                             (oidx[l, g], oslot[l, g], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_m, bl),
-                                   lambda i, l, g, oidx, oslot: (i, l)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(one + (block_m, bl), dx_map),
         ),
-        out_shape=jax.ShapeDtypeStruct((m, n_lb * bl), acc_dtype),
+        out_shape=out_shape,
         interpret=interpret,
-    )(jnp.asarray(out_idx, jnp.int32), jnp.asarray(out_slot, jnp.int32),
-      dy, w)
+    )(*operands)
     return dx.astype(dy.dtype)
 
 
 # ---------------------------------------------------------------------------
 # Backward-weights: dw[rb, f] = x[:, block_idx[rb, f]].T @ dy[:, rb]
 # (eq. (4b) per tile, accumulated over the batch)
+#
+# Fused backward epilogue as in the dx kernel; with ``want_db`` the bias
+# cotangent db[rb] = sum_m masked_dy[m, rb] rides along as a second output
+# (accumulated on the first fan-in slot only, so each dy tile is counted
+# once).
 # ---------------------------------------------------------------------------
 
 
-def _dw_kernel(idx_ref, x_ref, dy_ref, dw_ref):
-    i = pl.program_id(2)
+def _dw_kernel(*refs, batched: bool, activation: Optional[str],
+               want_db: bool):
+    if activation is not None:
+        idx_ref, x_ref, dy_ref, aux_ref = refs[:4]
+        out_refs = refs[4:]
+    else:
+        idx_ref, x_ref, dy_ref = refs[:3]
+        aux_ref = None
+        out_refs = refs[3:]
+    dw_ref = out_refs[0]
+    db_ref = out_refs[1] if want_db else None
+    base = 1 if batched else 0
+    f = pl.program_id(base + 1)
+    i = pl.program_id(base + 2)
 
     @pl.when(i == 0)
     def _init():
         dw_ref[...] = jnp.zeros_like(dw_ref)
 
-    x = x_ref[...]  # (block_m, bL)
-    dy = dy_ref[...]  # (block_m, bR)
-    dw_ref[0, 0] += jax.lax.dot_general(
+    def tile(ref):
+        return ref[0] if batched else ref[...]
+
+    x = tile(x_ref)    # (block_m, bL)
+    dy = tile(dy_ref)  # (block_m, bR)
+    if activation is not None:
+        dy = mask_cotangent(dy, tile(aux_ref), activation)
+    acc = jax.lax.dot_general(
         x, dy, (((0,), (0,)), ((), ())),
         preferred_element_type=dw_ref.dtype)
+    if batched:
+        dw_ref[0, 0, 0] += acc
+    else:
+        dw_ref[0, 0] += acc
 
+    if want_db:
+        @pl.when((f == 0) & (i == 0))
+        def _init_db():
+            db_ref[...] = jnp.zeros_like(db_ref)
 
-def _dw_kernel_batched(idx_ref, x_ref, dy_ref, dw_ref):
-    i = pl.program_id(3)
-
-    @pl.when(i == 0)
-    def _init():
-        dw_ref[...] = jnp.zeros_like(dw_ref)
-
-    x = x_ref[0]  # (block_m, bL)
-    dy = dy_ref[0]  # (block_m, bR)
-    dw_ref[0, 0, 0] += jax.lax.dot_general(
-        x, dy, (((0,), (0,)), ((), ())),
-        preferred_element_type=dw_ref.dtype)
-
-
-def _csd_spmm_dw_batched(x, dy, block_idx, *, block_in, block_out, block_m,
-                         interpret):
-    e, m, n_in = x.shape
-    n_rb, d_in_b = block_idx.shape
-    bl, br = block_in, block_out
-    if m % block_m:
-        raise ValueError(f"M={m} not divisible by block_m={block_m}")
-
-    grid = (e, n_rb, d_in_b, m // block_m)
-    dw = pl.pallas_call(
-        _dw_kernel_batched,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, block_m, bl),
-                             lambda e, r, f, i, idx: (e, i, idx[r, f])),
-                pl.BlockSpec((1, block_m, br),
-                             lambda e, r, f, i, idx: (e, i, r)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, 1, bl, br),
-                                   lambda e, r, f, i, idx: (e, r, f, 0, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((e, n_rb, d_in_b, bl, br),
-                                       jnp.float32),
-        interpret=interpret,
-    )(jnp.asarray(block_idx, jnp.int32), x, dy)
-    return dw.astype(x.dtype)
+        @pl.when(f == 0)
+        def _acc_db():
+            db_ref[...] += jnp.sum(
+                dy.astype(db_ref.dtype), axis=0, keepdims=True
+            ).reshape(db_ref.shape)
 
 
 def csd_spmm_dw(
     x: jax.Array,
     dy: jax.Array,
-    block_idx: np.ndarray,
+    block_idx,
     *,
     block_in: int,
     block_out: int,
+    aux: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    want_db: bool = False,
     block_m: int = 128,
     interpret: bool = False,
-) -> jax.Array:
+):
     """dw: (n_rb, d_in_b, bL, bR), batch-accumulated (innermost grid dim).
     Batched (expert-major) form: x (E, M, n_in), dy (E, M, n_out) ->
     dw (E, n_rb, d_in_b, bL, bR); per-expert accumulation over M only —
     any 3-D input IS interpreted as expert-batched (fwd/dx dispatch on the
-    unambiguous w.ndim; dw has no w, so the rank of x decides)."""
+    unambiguous w.ndim; dw has no w, so the rank of x decides).
+
+    ``aux``/``activation`` select the fused backward epilogue; with
+    ``want_db`` returns ``(dw, db)`` where db (f32, (n_out,) or (E,
+    n_out)) is the masked bias cotangent."""
     if x.ndim != dy.ndim or x.ndim not in (2, 3):
         raise ValueError(
             f"x/dy must both be 2-D (unbatched) or 3-D (expert-batched), "
             f"got {x.shape} / {dy.shape}")
-    if x.ndim == 3:
-        return _csd_spmm_dw_batched(x, dy, block_idx, block_in=block_in,
-                                    block_out=block_out, block_m=block_m,
-                                    interpret=interpret)
-    m, n_in = x.shape
+    batched = x.ndim == 3
+    if batched:
+        e, m, n_in = x.shape
+    else:
+        m, n_in = x.shape
     n_rb, d_in_b = block_idx.shape
     bl, br = block_in, block_out
     if m % block_m:
         raise ValueError(f"M={m} not divisible by block_m={block_m}")
 
-    grid = (n_rb, d_in_b, m // block_m)
-    dw = pl.pallas_call(
-        _dw_kernel,
+    one = (1,) if batched else ()
+
+    def imap(fn):
+        if batched:
+            return lambda e_, r, f, i, idx: fn((e_,), r, f, i, idx)
+        return lambda r, f, i, idx: fn((), r, f, i, idx)
+
+    x_map = imap(lambda e_, r, f, i, idx: e_ + (i, idx[r, f]))
+    dy_map = imap(lambda e_, r, f, i, idx: e_ + (i, r))
+    dw_map = imap(lambda e_, r, f, i, idx: e_ + (r, f, 0, 0))
+    db_map = imap(lambda e_, r, f, i, idx: e_ + (r, 0))
+
+    in_specs = [pl.BlockSpec(one + (block_m, bl), x_map),
+                pl.BlockSpec(one + (block_m, br), dy_map)]
+    operands = [jnp.asarray(block_idx, jnp.int32), x, dy]
+    if activation is not None:
+        if aux is None:
+            raise ValueError("fused backward epilogue needs aux")
+        in_specs.append(pl.BlockSpec(one + (block_m, br), dy_map))
+        operands.append(aux)
+
+    grid = ((e,) if batched else ()) + (n_rb, d_in_b, m // block_m)
+    dw_spec = pl.BlockSpec(one + (1, 1, bl, br), dw_map)
+    dw_shape = jax.ShapeDtypeStruct(
+        ((e,) if batched else ()) + (n_rb, d_in_b, bl, br), jnp.float32)
+    if want_db:
+        out_specs = (dw_spec, pl.BlockSpec(one + (1, br), db_map))
+        out_shapes = (dw_shape, jax.ShapeDtypeStruct(
+            ((e,) if batched else ()) + (n_rb, br), jnp.float32))
+    else:
+        out_specs = dw_spec
+        out_shapes = dw_shape
+    kernel = functools.partial(_dw_kernel, batched=batched,
+                               activation=activation, want_db=want_db)
+    out = pl.pallas_call(
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_m, bl),
-                             lambda r, f, i, idx: (i, idx[r, f])),
-                pl.BlockSpec((block_m, br),
-                             lambda r, f, i, idx: (i, r)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, bl, br),
-                                   lambda r, f, i, idx: (r, f, 0, 0)),
+            in_specs=in_specs,
+            out_specs=out_specs,
         ),
-        out_shape=jax.ShapeDtypeStruct((n_rb, d_in_b, bl, br), jnp.float32),
+        out_shape=out_shapes,
         interpret=interpret,
-    )(jnp.asarray(block_idx, jnp.int32), x, dy)
-    return dw.astype(x.dtype)
+    )(*operands)
+    if want_db:
+        dw, db = out
+        return dw.astype(x.dtype), db.reshape(
+            ((e,) if batched else ()) + (n_rb * br,))
+    return out.astype(x.dtype)

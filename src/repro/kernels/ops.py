@@ -96,9 +96,15 @@ class _Pat:
         self.block_idx = np.asarray(bp.block_idx, np.int32)
         self.out_idx = np.asarray(bp.out_idx, np.int32)
         self.out_slot = np.asarray(bp.out_slot, np.int32)
+        # scatter-form padding mask of shard-local patterns (None = all
+        # entries real); every scatter-form consumer below honors it
+        self.out_valid = None if getattr(bp, "out_valid", None) is None \
+            else np.asarray(bp.out_valid, np.int32)
         self.block_in = bp.block_in
         self.block_out = bp.block_out
         self._key = (self.block_idx.tobytes(), self.out_idx.tobytes(),
+                     None if self.out_valid is None
+                     else self.out_valid.tobytes(),
                      bp.block_in, bp.block_out)
 
     def __hash__(self):
@@ -141,14 +147,16 @@ def _slot_sweep(slot, acc0, xs):
     return y
 
 
-def _xla_fwd(x, w, pat):
+def _xla_fwd(x, w, block_idx):
     """x: (..., n_in) — leading dims preserved so GSPMD keeps their
     (batch, seq) sharding through the take/einsum chain (flattening them
-    merges sharded axes and the partitioner gives up -> full replication)."""
+    merges sharded axes and the partitioner gives up -> full replication).
+    ``block_idx`` (n_rb, d_in_b) may be numpy or a traced jnp array (the
+    sharded path selects the shard-local pattern by ``axis_index``)."""
     n_rb, d_in_b, bl, br = w.shape
     lead = x.shape[:-1]
     xb = x.reshape(lead + (-1, bl))
-    idx = jnp.asarray(pat.block_idx.T)  # (d_in_b, n_rb)
+    idx = jnp.asarray(block_idx).T  # (d_in_b, n_rb)
 
     def slot(acc, inp):
         idx_f, w_f = inp
@@ -161,21 +169,27 @@ def _xla_fwd(x, w, pat):
     return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
 
 
-def _xla_fwd_scatter(x, w, pat):
+def _xla_fwd_scatter(x, w, out_idx, out_slot, out_valid=None):
     """Row-parallel slot-wise forward: each left block pushes its partial
     product into the right blocks it feeds (segment-sum over the reverse
     adjacency). Same O(one output intermediate) peak as ``_xla_fwd``; the
-    different dataflow gives GSPMD the input-sharded lowering."""
+    different dataflow gives GSPMD the input-sharded lowering.
+    ``out_valid`` zeroes padded entries of shard-local scatter forms."""
     n_rb, d_in_b, bl, br = w.shape
-    n_lb, d_out_b = pat.out_idx.shape
+    n_lb, d_out_b = out_idx.shape
     lead = x.shape[:-1]
     xb = x.reshape(lead + (n_lb, bl))
-    oidx = jnp.asarray(pat.out_idx.T)    # (d_out_b, n_lb)
-    oslot = jnp.asarray(pat.out_slot.T)
+    oidx = jnp.asarray(out_idx).T    # (d_out_b, n_lb)
+    oslot = jnp.asarray(out_slot).T
+    xs = (oidx, oslot)
+    if out_valid is not None:
+        xs = xs + (jnp.asarray(out_valid).T,)
 
     def slot(acc, inp):
-        oi, os = inp
+        oi, os = inp[0], inp[1]
         w_g = w[oi, os].astype(xb.dtype)            # (n_lb, bL, bR)
+        if out_valid is not None:
+            w_g = w_g * inp[2][:, None, None].astype(w_g.dtype)
         p = jnp.einsum("...li,lio->...lo", xb, w_g)
         contrib = jax.ops.segment_sum(
             jnp.moveaxis(p.astype(acc.dtype), -2, 0), oi,
@@ -183,37 +197,44 @@ def _xla_fwd_scatter(x, w, pat):
         return acc + jnp.moveaxis(contrib, 0, -2), None
 
     acc0 = jnp.zeros(lead + (n_rb, br), _acc_dtype(x.dtype, d_out_b))
-    y = _slot_sweep(slot, acc0, (oidx, oslot))
+    y = _slot_sweep(slot, acc0, xs)
     return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
 
 
-def _xla_dx(dy, w, pat):
+def _xla_dx(dy, w, out_idx, out_slot, out_valid=None):
+    """``out_valid`` (n_lb, d_out_b) 0/1 marks padded entries of a
+    shard-local (non-uniform out-degree) scatter pattern; padded entries
+    contribute zero."""
     n_rb, d_in_b, bl, br = w.shape
-    n_lb, d_out_b = pat.out_idx.shape
+    n_lb, d_out_b = out_idx.shape
     lead = dy.shape[:-1]
     dyb = dy.reshape(lead + (n_rb, br))
-    oidx = jnp.asarray(pat.out_idx.T)    # (d_out_b, n_lb)
-    oslot = jnp.asarray(pat.out_slot.T)
+    oidx = jnp.asarray(out_idx).T    # (d_out_b, n_lb)
+    oslot = jnp.asarray(out_slot).T
+    xs = (oidx, oslot)
+    if out_valid is not None:
+        xs = xs + (jnp.asarray(out_valid).T,)
 
     def slot(acc, inp):
-        oi, os = inp
+        oi, os = inp[0], inp[1]
         lhs = jnp.take(dyb, oi, axis=-2)            # (..., n_lb, bR)
         w_g = w[oi, os].astype(lhs.dtype)           # (n_lb, bL, bR)
+        if out_valid is not None:
+            w_g = w_g * inp[2][:, None, None].astype(w_g.dtype)
         d = jnp.einsum("...lo,lio->...li", lhs, w_g)
         return acc + d.astype(acc.dtype), None
 
     acc0 = jnp.zeros(lead + (n_lb, bl), _acc_dtype(dy.dtype, d_out_b))
-    dx = _slot_sweep(slot, acc0, (oidx, oslot))
+    dx = _slot_sweep(slot, acc0, xs)
     return dx.reshape(lead + (n_lb * bl,)).astype(dy.dtype)
 
 
-def _xla_dw(x, dy, pat):
-    n_rb, d_in_b = pat.block_idx.shape
-    bl, br = pat.block_in, pat.block_out
+def _xla_dw(x, dy, block_idx, bl, br):
+    n_rb, d_in_b = block_idx.shape
     lead = x.shape[:-1]
     xb = x.reshape(lead + (-1, bl))
     dyb = dy.reshape(lead + (n_rb, br))
-    idx = jnp.asarray(pat.block_idx.T)
+    idx = jnp.asarray(block_idx).T
 
     def slot(_, idx_f):
         lhs = jnp.take(xb, idx_f, axis=-2)  # (..., n_rb, bL)
@@ -238,16 +259,20 @@ def _xla_dw(x, dy, pat):
 
 
 def _xla_fwd_batched(x, w, pat, dataflow):
-    fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
-    return jax.vmap(lambda xe, we: fwd(xe, we, pat))(x, w)
+    if dataflow == "scatter":
+        return jax.vmap(lambda xe, we: _xla_fwd_scatter(
+            xe, we, pat.out_idx, pat.out_slot, pat.out_valid))(x, w)
+    return jax.vmap(lambda xe, we: _xla_fwd(xe, we, pat.block_idx))(x, w)
 
 
 def _xla_dx_batched(dy, w, pat):
-    return jax.vmap(lambda de, we: _xla_dx(de, we, pat))(dy, w)
+    return jax.vmap(lambda de, we: _xla_dx(
+        de, we, pat.out_idx, pat.out_slot, pat.out_valid))(dy, w)
 
 
 def _xla_dw_batched(x, dy, pat):
-    return jax.vmap(lambda xe, de: _xla_dw(xe, de, pat))(x, dy)
+    return jax.vmap(lambda xe, de: _xla_dw(
+        xe, de, pat.block_idx, pat.block_in, pat.block_out))(x, dy)
 
 
 # ---------------------------------------------------------------------------
@@ -278,9 +303,11 @@ def _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
         return y, None
     if batched:
         z = _xla_fwd_batched(x, w, pat, dataflow)
+    elif dataflow == "scatter":
+        z = _xla_fwd_scatter(x, w, pat.out_idx, pat.out_slot,
+                             pat.out_valid)
     else:
-        fwd = _xla_fwd_scatter if dataflow == "scatter" else _xla_fwd
-        z = fwd(x, w, pat)
+        z = _xla_fwd(x, w, pat.block_idx)
     if has_bias:
         bb = b
         if batched:  # (E, n_out) broadcast over the per-expert leading dims
@@ -310,46 +337,316 @@ def _fwd_vjp(x, w, b, pat, has_bias, activation, backend, dataflow,
     return y, (x, w, b, aux)
 
 
+def _mask_dy_xla(dy, aux, activation):
+    """XLA-path fused-epilogue gradient: mask/scale the cotangent before
+    it enters BP (dx) and UP (dw) — eq. (3)/(4) with the activation
+    derivative folded into delta. (The Pallas path masks *inside* the
+    BP/UP kernels instead — the fused backward epilogue.)"""
+    if activation == "relu":
+        return dy * (aux > 0).astype(dy.dtype)
+    if activation == "gelu":
+        _, act_vjp = jax.vjp(
+            lambda z: jax.nn.gelu(z, approximate=True),
+            aux.astype(jnp.float32))
+        return act_vjp(dy.astype(jnp.float32))[0].astype(dy.dtype)
+    return dy
+
+
 def _bwd_vjp(pat, has_bias, activation, backend, dataflow, block_m,
              interpret, res, dy):
     x, w, b, aux = res
     # keep backward slot traffic in the compute dtype — f32 cotangents
     # double the (already dominant) gather/accumulate HBM bytes
     dy = dy.astype(x.dtype)
-    # fused-epilogue gradient: mask/scale the cotangent before it enters
-    # BP (dx) and UP (dw) — eq. (3)/(4) with the activation derivative
-    # folded into delta.
-    if activation == "relu":
-        dy = dy * (aux > 0).astype(dy.dtype)
-    elif activation == "gelu":
-        _, act_vjp = jax.vjp(
-            lambda z: jax.nn.gelu(z, approximate=True),
-            aux.astype(jnp.float32))
-        dy = act_vjp(dy.astype(jnp.float32))[0].astype(dy.dtype)
     batched = w.ndim == 5
+    if backend == "pallas":
+        # fused backward epilogue: the raw cotangent streams into the
+        # BP/UP kernels which mask it tile-by-tile from aux (and fold the
+        # bias cotangent into the UP sweep) — no separate elementwise op,
+        # no masked-dy round-trip through HBM
+        dx = csd_spmm.csd_spmm_dx(dy, w, pat.out_idx, pat.out_slot,
+                                  out_valid=pat.out_valid, aux=aux,
+                                  activation=activation,
+                                  block_m=block_m, interpret=interpret)
+        if has_bias:
+            dw, db = csd_spmm.csd_spmm_dw(
+                x, dy, pat.block_idx, block_in=pat.block_in,
+                block_out=pat.block_out, aux=aux, activation=activation,
+                want_db=True, block_m=block_m, interpret=interpret)
+            db = db.astype(b.dtype)
+        else:
+            dw = csd_spmm.csd_spmm_dw(
+                x, dy, pat.block_idx, block_in=pat.block_in,
+                block_out=pat.block_out, aux=aux, activation=activation,
+                block_m=block_m, interpret=interpret)
+            db = jnp.zeros((0,), b.dtype)
+        return dx, dw.astype(w.dtype), db
+    dy = _mask_dy_xla(dy, aux, activation)
     if has_bias:
         # batched: keep the per-expert leading dim — db is (E, n_out)
         axes = tuple(range(1 if batched else 0, dy.ndim - 1))
         db = jnp.sum(dy.astype(jnp.float32), axis=axes).astype(b.dtype)
     else:
         db = jnp.zeros((0,), b.dtype)
-    if backend == "pallas":
-        dx = csd_spmm.csd_spmm_dx(dy, w, pat.out_idx, pat.out_slot,
-                                  block_m=block_m, interpret=interpret)
-        dw = csd_spmm.csd_spmm_dw(x, dy, pat.block_idx,
-                                  block_in=pat.block_in,
-                                  block_out=pat.block_out,
-                                  block_m=block_m, interpret=interpret)
-    elif batched:
+    if batched:
         dx = _xla_dx_batched(dy, w, pat)
         dw = _xla_dw_batched(x, dy, pat)
     else:
-        dx = _xla_dx(dy, w, pat)
-        dw = _xla_dw(x, dy, pat)
+        dx = _xla_dx(dy, w, pat.out_idx, pat.out_slot, pat.out_valid)
+        dw = _xla_dw(x, dy, pat.block_idx, pat.block_in, pat.block_out)
     return dx, dw.astype(w.dtype), db
 
 
 _csd_matmul.defvjp(_fwd_vjp, _bwd_vjp)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (model-parallel) junctions — the jax_pallas form of the paper's
+# size-flexible hardware: the same junction processed k block-row ranges at
+# a time, one range per mesh device. Under ``shard_map`` every device runs
+# its shard-local scalar-prefetched pattern against its slab rows:
+#
+#   FF — shard-local forward over the local gather pattern; the output
+#        feature axis comes out sharded over ``axis`` (column-parallel);
+#   BP — shard-local dx over the local (padded, validity-masked) scatter
+#        pattern, then ``psum`` over ``axis`` (each shard contributes the
+#        cotangent flowing through its output rows);
+#   UP — dw and db are SHARD-LOCAL: a device's weight rows only ever see
+#        its own dy shard, so weight gradients (and therefore Adam state)
+#        stay sharded over ``axis`` ZeRO-style with no extra collectives.
+#
+# The global slab keeps its logical (n_rb, d_in_b, bL, bR) layout sharded
+# contiguously on the block-row dim — exactly what a NamedSharding row
+# chunking produces, so entering the shard_map moves no weight data.
+# ---------------------------------------------------------------------------
+
+
+class _ShardPat:
+    """Hashable static carrier of a partitioned pattern (stacked per-shard
+    arrays; selected per-device by ``axis_index`` inside the shard_map)."""
+
+    def __init__(self, part):
+        self.idx = np.asarray(part.idx, np.int32)
+        self.oidx = np.asarray(part.out_idx, np.int32)
+        self.oslot = np.asarray(part.out_slot, np.int32)
+        self.ovalid = np.asarray(part.out_valid, np.int32)
+        self.block_in = part.parent.block_in
+        self.block_out = part.parent.block_out
+        self.n_shards = part.n_shards
+        self._key = (self.idx.tobytes(), self.oidx.tobytes(),
+                     self.oslot.tobytes(), self.ovalid.tobytes(),
+                     self.block_in, self.block_out)
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, _ShardPat) and self._key == other._key
+
+
+_PARTITION_CACHE: dict = {}
+
+
+def get_partition(pattern: BlockPattern, axis_size: int):
+    """Cached ``partition_pattern`` (patterns are immutable; partitioning
+    is pure numpy work we only want once per (pattern, k))."""
+    from ..core.block_pattern import partition_pattern
+    key = (pattern.block_idx.tobytes(), pattern.block_in,
+           pattern.block_out, pattern.n_in, pattern.n_out, axis_size)
+    part = _PARTITION_CACHE.get(key)
+    if part is None:
+        part = _PARTITION_CACHE[key] = partition_pattern(pattern, axis_size)
+    return part
+
+
+def _shard_specs(batched, has_bias, lead, axis):
+    from jax.sharding import PartitionSpec as P
+    x_spec = P(*lead, None)
+    if batched:
+        w_spec = P(None, axis, None, None, None)
+    else:
+        w_spec = P(axis, None, None, None)
+    if has_bias:
+        b_spec = P(None, axis) if batched else P(axis)
+    else:
+        b_spec = P(axis)  # zero-length placeholder: 0 % k == 0
+    y_spec = P(*lead, axis)
+    return x_spec, w_spec, b_spec, y_spec
+
+
+def _local_pattern(spat, axis):
+    """Per-device slices of the stacked pattern arrays (traced by
+    ``axis_index`` — the device id IS the address-generator seed here)."""
+    s = jax.lax.axis_index(axis)
+    return (jnp.asarray(spat.idx)[s], jnp.asarray(spat.oidx)[s],
+            jnp.asarray(spat.oslot)[s], jnp.asarray(spat.ovalid)[s])
+
+
+def _spmd_fwd_call(x, w, b, spat, has_bias, activation, backend, block_m,
+                   interpret, mesh, axis, lead, want_aux):
+    from ..compat import shard_map
+    batched = w.ndim == 5
+    x_spec, w_spec, b_spec, y_spec = _shard_specs(
+        batched, has_bias, lead, axis)
+
+    def local(xl, wl, bl):
+        idx, _, _, _ = _local_pattern(spat, axis)
+        if backend == "pallas":
+            bias_l = bl if has_bias else None
+            if want_aux and activation == "gelu":
+                return csd_spmm.csd_spmm_fwd(
+                    xl, wl, idx, bias=bias_l, activation="gelu",
+                    save_preact=True, block_m=block_m, interpret=interpret)
+            y = csd_spmm.csd_spmm_fwd(
+                xl, wl, idx, bias=bias_l, activation=activation,
+                block_m=block_m, interpret=interpret)
+            return (y, y) if want_aux else y
+        if batched:
+            z = jax.vmap(lambda xe, we: _xla_fwd(xe, we, idx))(xl, wl)
+        else:
+            z = _xla_fwd(xl, wl, idx)
+        if has_bias:
+            bb = bl
+            if batched:
+                bb = bl.reshape((bl.shape[0],) + (1,) * (z.ndim - 2)
+                                + bl.shape[1:])
+            z = z + bb.astype(z.dtype)
+        y = csd_spmm.apply_activation(z, activation)
+        if want_aux:
+            return y, (z if activation == "gelu" else y)
+        return y
+
+    out_specs = (y_spec, y_spec) if want_aux else y_spec
+    fn = shard_map(local, mesh=mesh, in_specs=(x_spec, w_spec, b_spec),
+                   out_specs=out_specs, check_vma=False)
+    return fn(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9,
+                                                    10, 11))
+def _csd_matmul_spmd(x, w, b, spat: _ShardPat, has_bias: bool,
+                     activation: Optional[str], backend: str, block_m: int,
+                     interpret: bool, mesh, axis: str, lead: tuple):
+    return _spmd_fwd_call(x, w, b, spat, has_bias, activation, backend,
+                          block_m, interpret, mesh, axis, lead,
+                          want_aux=False)
+
+
+def _spmd_fwd_vjp(x, w, b, spat, has_bias, activation, backend, block_m,
+                  interpret, mesh, axis, lead):
+    if activation is None:
+        y = _spmd_fwd_call(x, w, b, spat, has_bias, activation, backend,
+                           block_m, interpret, mesh, axis, lead,
+                           want_aux=False)
+        aux = y  # unused by the backward; placeholder with y's sharding
+    else:
+        y, aux = _spmd_fwd_call(x, w, b, spat, has_bias, activation,
+                                backend, block_m, interpret, mesh, axis,
+                                lead, want_aux=True)
+    return y, (x, w, b, aux)
+
+
+def _spmd_bwd_vjp(spat, has_bias, activation, backend, block_m, interpret,
+                  mesh, axis, lead, res, dy):
+    from ..compat import shard_map
+    from jax.sharding import PartitionSpec as P
+    x, w, b, aux = res
+    dy = dy.astype(x.dtype)
+    batched = w.ndim == 5
+    x_spec, w_spec, b_spec, y_spec = _shard_specs(
+        batched, has_bias, lead, axis)
+    bl_, br_ = spat.block_in, spat.block_out
+
+    def local(xl, wl, bll, auxl, dyl):
+        idx, oidx, oslot, ovalid = _local_pattern(spat, axis)
+        if backend == "pallas":
+            dxl = csd_spmm.csd_spmm_dx(
+                dyl, wl, oidx, oslot, out_valid=ovalid, aux=auxl,
+                activation=activation, block_m=block_m,
+                interpret=interpret)
+            if has_bias:
+                dwl, dbl = csd_spmm.csd_spmm_dw(
+                    xl, dyl, idx, block_in=bl_, block_out=br_, aux=auxl,
+                    activation=activation, want_db=True, block_m=block_m,
+                    interpret=interpret)
+            else:
+                dwl = csd_spmm.csd_spmm_dw(
+                    xl, dyl, idx, block_in=bl_, block_out=br_, aux=auxl,
+                    activation=activation, block_m=block_m,
+                    interpret=interpret)
+                dbl = jnp.zeros((0,), jnp.float32)
+        else:
+            dym = _mask_dy_xla(dyl, auxl, activation)
+            if batched:
+                dxl = jax.vmap(lambda de, we: _xla_dx(
+                    de, we, oidx, oslot, ovalid))(dym, wl)
+                dwl = jax.vmap(lambda xe, de: _xla_dw(
+                    xe, de, idx, bl_, br_))(xl, dym)
+            else:
+                dxl = _xla_dx(dym, wl, oidx, oslot, ovalid)
+                dwl = _xla_dw(xl, dym, idx, bl_, br_)
+            if has_bias:
+                axes = tuple(range(1 if batched else 0, dym.ndim - 1))
+                dbl = jnp.sum(dym.astype(jnp.float32), axis=axes)
+            else:
+                dbl = jnp.zeros((0,), jnp.float32)
+        # BP assembles the full input cotangent: every shard's output rows
+        # pull on the whole input, so the partials all-reduce over `axis`
+        dx = jax.lax.psum(dxl, axis)
+        return dx, dwl, dbl
+
+    dx_spec = P(*lead, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, w_spec, b_spec, y_spec, y_spec),
+        out_specs=(dx_spec, w_spec, b_spec), check_vma=False)
+    aux_arr = aux if activation is not None else dy
+    dx, dw, db = fn(x, w, b, aux_arr, dy)
+    return dx, dw.astype(w.dtype), db.astype(b.dtype)
+
+
+_csd_matmul_spmd.defvjp(_spmd_fwd_vjp, _spmd_bwd_vjp)
+
+
+def _csd_matmul_sharded(x, w, pattern, bias, activation, backend, block_m,
+                        interpret, mesh, axis, lead_spec):
+    """Entry for the sharded path: validate the partition, normalize the
+    lead spec, pad M for the Pallas layout, run the SPMD custom-VJP."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}")
+    k = int(mesh.shape[axis])
+    # partition_pattern guarantees a contiguous split (fixed-degree is
+    # structural for BlockPattern), so the global slab's NamedSharding
+    # row chunks are exactly the per-device slabs this path assumes
+    part = get_partition(pattern, k)
+    spat = _ShardPat(part)
+    batched = w.ndim == 5
+    has_bias = bias is not None
+    b = bias if has_bias else jnp.zeros((0,), x.dtype)
+    if backend == "pallas":
+        n_in = x.shape[-1]
+        xf = x.reshape(((x.shape[0],) if batched else ()) + (-1, n_in))
+        m = xf.shape[-2]
+        pad = (-m) % block_m
+        if pad:
+            widths = [(0, 0)] * (xf.ndim - 2) + [(0, pad), (0, 0)]
+            xf = jnp.pad(xf, widths)
+        lead = (None,) * (xf.ndim - 1)
+        y = _csd_matmul_spmd(xf, w, b, spat, has_bias, activation, backend,
+                             block_m, interpret, mesh, axis, lead)
+        if pad:
+            y = y[..., :m, :]
+        return y.reshape(x.shape[:-1] + (y.shape[-1],))
+    if lead_spec is None:
+        lead = (None,) * (x.ndim - 1)
+    else:
+        lead = tuple(lead_spec)
+        if len(lead) != x.ndim - 1:
+            raise ValueError(
+                f"lead_spec {lead_spec} must cover the {x.ndim - 1} "
+                f"leading dims of x {x.shape}")
+    return _csd_matmul_spmd(x, w, b, spat, has_bias, activation, backend,
+                            block_m, interpret, mesh, axis, lead)
 
 
 def csd_matmul(
@@ -363,6 +660,9 @@ def csd_matmul(
     dataflow: str = "gather",
     block_m: int = 128,
     interpret: bool = False,
+    mesh=None,
+    axis: Optional[str] = None,
+    lead_spec=None,
 ) -> jax.Array:
     """Differentiable block-sparse junction: (..., n_in) -> (..., n_out),
     computing ``activation(x @ W_sparse + bias)`` with the epilogue fused
@@ -378,6 +678,15 @@ def csd_matmul(
     flattened to M (per expert in the batched form) and padded to
     ``block_m`` for the Pallas path; the XLA path keeps leading dims intact
     so GSPMD preserves their sharding. The pattern is compile-time static.
+
+    Sharded (model-parallel) form: pass ``mesh`` and ``axis`` (a mesh axis
+    name) to partition the pattern and slab over ``mesh.shape[axis]``
+    devices — each device runs its shard-local pattern under ``shard_map``
+    (FF column-parallel, BP psum'd, UP shard-local; see the sharded-section
+    comment). ``w``/``bias`` keep their logical layouts, row-sharded on the
+    block-row / feature dim; ``lead_spec`` optionally names the mesh axes
+    of ``x``'s leading dims (XLA path) so their sharding survives entry.
+    Requires ``n_rb % mesh.shape[axis] == 0`` (see ``can_partition``).
     """
     if activation is not None and activation not in csd_spmm.ACTIVATIONS:
         raise ValueError(f"unsupported fused activation {activation!r}")
@@ -389,6 +698,10 @@ def csd_matmul(
             f"batched junction: x leading dim {x.shape} must match expert "
             f"count E={w.shape[0]}")
     backend = _resolve(backend)
+    if mesh is not None and axis is not None:
+        return _csd_matmul_sharded(x, w, pattern, bias, activation,
+                                   backend, block_m, interpret, mesh, axis,
+                                   lead_spec)
     pat = _Pat(pattern)
     has_bias = bias is not None
     b = bias if has_bias else jnp.zeros((0,), x.dtype)

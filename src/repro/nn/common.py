@@ -59,6 +59,38 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
         x, jax.sharding.NamedSharding(mesh, spec))
 
 
+def junction_shard_ctx(pattern):
+    """(mesh, axis) when the sharded block-sparse junction path applies
+    under the installed mesh/rules, else ``None``.
+
+    The decision is the runtime side of the policy's ``"slab"`` rule: the
+    rule must resolve to a single mesh axis of size > 1 and the pattern's
+    block-rows must split evenly over it (``can_partition`` — the same
+    divisibility ``sanitize`` applies to the slab's storage sharding, so
+    compute partition and weight chunks always agree)."""
+    mesh = _MESH.get()
+    if mesh is None or pattern is None:
+        return None
+    ax = _AXIS_RULES.get().get("slab")
+    if not isinstance(ax, str) or ax not in mesh.axis_names:
+        return None
+    from ..core.block_pattern import can_partition
+    if not can_partition(pattern, int(mesh.shape[ax])):
+        return None
+    return mesh, ax
+
+
+def junction_shard_kwargs(pattern) -> dict:
+    """``csd_matmul`` kwargs selecting the sharded junction path, or ``{}``
+    when it doesn't apply — the ONE place the gating decision plus kwarg
+    spelling lives, shared by every junction call site (``nn.layers``,
+    ``nn.ffn``, ``core.sparse_linear``)."""
+    ctx = junction_shard_ctx(pattern)
+    if ctx is None:
+        return {}
+    return {"mesh": ctx[0], "axis": ctx[1]}
+
+
 # ---------------------------------------------------------------------------
 # Configuration
 # ---------------------------------------------------------------------------

@@ -44,7 +44,8 @@ import numpy as np
 from ..compat import shard_map
 from ..core.block_pattern import fit_block_pattern
 from ..kernels import ops as kops
-from .common import ModelConfig, MoEConfig, current_mesh, shard
+from .common import (ModelConfig, MoEConfig, current_mesh,
+                     junction_shard_kwargs, shard)
 from .layers import Linear, activation
 
 # activation names the fused csd_matmul epilogue understands (the registry
@@ -173,10 +174,18 @@ class MoE:
 
     def spec(self) -> dict:
         def wspec(pat, dense_axes):
-            # sparse slab (E, n_rb, d_in_b, bL, bR): shard the expert dim,
-            # replicate the (tiny) per-expert pattern dims
-            return ("expert", None, None, None, None) if pat is not None \
-                else dense_axes
+            # sparse slab (E, n_rb, d_in_b, bL, bR). The sharded dim must
+            # match the dispatch mode's compute partition, or every step
+            # pays a reshard at shard_map entry: shardmap dispatch shards
+            # experts over the model axis ("expert"); local dispatch runs
+            # the model-parallel junction path, which chunks the
+            # block-row dim ("slab"). Both rules resolve to the same
+            # axis, so they cannot be annotated together.
+            if pat is None:
+                return dense_axes
+            return ("expert", None, None, None, None) \
+                if self.impl == "shardmap" \
+                else (None, "slab", None, None, None)
         s = {"router": (None, None),
              "up": wspec(self.up_pat, ("expert", "embed", None)),
              "gate": wspec(self.gate_pat, ("expert", "embed", None)),
@@ -201,60 +210,92 @@ class MoE:
         probs = jax.nn.softmax(logits, axis=-1)
         gates, ids = jax.lax.top_k(probs, mc.top_k)
         gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
-        # Switch-style load balance + router z-loss
+        # Switch-style load balance + router z-loss. ce = fraction of
+        # tokens whose top-1 lands on each expert: a bincount (segment
+        # count), not a (T, E) one-hot materialization — ids carry no
+        # gradient either way, so only the intermediate changes
+        ce = jnp.bincount(ids[:, 0], length=mc.n_routed).astype(
+            jnp.float32) / ids.shape[0]
         me = jnp.mean(probs, axis=0)
-        ce = jnp.mean(
-            jax.nn.one_hot(ids[:, 0], mc.n_routed, dtype=jnp.float32), axis=0)
         lb_loss = mc.n_routed * jnp.sum(me * ce)
         z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
         aux = {"moe_lb": lb_loss, "moe_z": mc.router_zloss * z_loss}
         return gates, ids, aux
 
-    def _junction(self, xe, w, pat, activation=None):
+    def _junction(self, xe, w, pat, activation=None, sharded=False):
         """One stacked expert junction: batched csd_matmul when pre-defined
-        sparse, stacked einsum (the kernels.ref oracle form) when dense."""
+        sparse, stacked einsum (the kernels.ref oracle form) when dense.
+        ``sharded`` opts into the model-parallel junction path (per-expert
+        slabs partitioned over the slab axis) when the installed rules and
+        this junction's pattern allow it."""
         cdt = xe.dtype
         if pat is not None:
+            kw = junction_shard_kwargs(pat) if sharded else {}
             return kops.csd_matmul(xe, w.astype(cdt), pat,
                                    activation=activation,
-                                   backend=self.backend)
+                                   backend=self.backend, **kw)
         y = jnp.einsum("ecd,edf->ecf", xe, w.astype(cdt))
         return kops.apply_activation(y, activation)
 
-    def _expert_ffn(self, up, gate, down, xe):
+    def _expert_ffn(self, up, gate, down, xe, sharded=False):
         """xe: (E_loc, C, d) -> (E_loc, C, d), batched over experts — the
         expert compute of BOTH dispatch modes (gshard-style local and
         shard_map expert-parallel). Each junction routes through the
         batched block-sparse csd_matmul path when it carries a pattern;
-        a fusable activation rides the gate junction's epilogue."""
+        a fusable activation rides the gate junction's epilogue.
+
+        ``sharded=True`` (local dispatch mode only — the shard_map mode
+        already spends the model axis on expert parallelism) partitions
+        every expert's slab over the slab axis: the 5-D batched kernels
+        run shard-local with the expert index still the leading grid dim.
+        """
         fused = _FUSABLE.get(self.cfg.act) if self.gate_pat is not None \
             else None
-        h = self._junction(xe, up, self.up_pat)
-        g = self._junction(xe, gate, self.gate_pat, activation=fused)
+        h = self._junction(xe, up, self.up_pat, sharded=sharded)
+        g = self._junction(xe, gate, self.gate_pat, activation=fused,
+                           sharded=sharded)
         if fused is None:
             g = self.act(g)
-        return self._junction(g * h, down, self.down_pat)
+        return self._junction(g * h, down, self.down_pat, sharded=sharded)
 
     # -- local (single-shard) sort-based dispatch ----------------------------
 
     def _dispatch_local(self, x2d, gates, ids, capacity):
-        """Build (E, C) token-index and gate buffers from local routing."""
+        """Build (E, C) token-index and gate buffers from local routing.
+
+        Gather form: after the stable sort by expert id, expert ``e``'s
+        assignments occupy sorted rows ``[starts[e], starts[e]+counts[e])``
+        — buffer cell ``(e, c)`` is a ``jnp.take`` at ``starts[e]+c``
+        (over-capacity tails fall off the end of the window). This
+        replaces the old scatter build (``.at[sid, pos].set``), whose
+        (T*k -> E*(C+1)) scatter dominated dispatch cost at low expert
+        density; same buffers, same drop policy.
+        """
         mc = self.mc
         T = x2d.shape[0]
         k, E, C = mc.top_k, mc.n_routed, capacity
         flat_ids = ids.reshape(-1)
         order = jnp.argsort(flat_ids, stable=True)
-        sid = flat_ids[order]
-        stok = order // k
+        stok = (order // k).astype(jnp.int32)
         sgate = gates.reshape(-1)[order]
         counts = jnp.bincount(flat_ids, length=E)
         starts = jnp.cumsum(counts) - counts
-        pos = jnp.arange(T * k) - starts[sid]
-        posc = jnp.minimum(pos, C)  # overflow -> spill column C
-        buf_tok = jnp.full((E, C + 1), T, jnp.int32).at[sid, posc].set(
-            stok.astype(jnp.int32))
-        buf_gate = jnp.zeros((E, C + 1), jnp.float32).at[sid, posc].set(sgate)
-        return buf_tok[:, :C], buf_gate[:, :C]
+        gidx = starts[:, None] + jnp.arange(C)[None]       # (E, C)
+        valid = jnp.arange(C)[None] < counts[:, None]
+        gidx = jnp.clip(gidx, 0, T * k - 1)
+        buf_tok = jnp.where(valid, jnp.take(stok, gidx),
+                            jnp.int32(T))
+        buf_gate = jnp.where(valid, jnp.take(sgate, gidx), 0.0)
+        return buf_tok, buf_gate
+
+    def _combine_local(self, ye, buf_tok, buf_gate, T):
+        """Weight expert outputs by their gates and segment-sum them back
+        onto token rows (row T is the dispatch-padding sink)."""
+        d = ye.shape[-1]
+        yw = ye * buf_gate[..., None].astype(ye.dtype)
+        y = jax.ops.segment_sum(yw.reshape(-1, d), buf_tok.reshape(-1),
+                                num_segments=T + 1)
+        return y[:T]
 
     def _moe_local(self, params, x2d, capacity):
         gates, ids, aux = self._route(params, x2d)
@@ -263,11 +304,8 @@ class MoE:
         xp = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
         xe = xp[buf_tok]  # (E, C, d)
         ye = self._expert_ffn(params["up"], params["gate"], params["down"],
-                              xe)
-        yw = ye * buf_gate[..., None].astype(ye.dtype)
-        y = jnp.zeros((T + 1, d), ye.dtype).at[buf_tok.reshape(-1)].add(
-            yw.reshape(-1, d))
-        return y[:T], aux
+                              xe, sharded=True)
+        return self._combine_local(ye, buf_tok, buf_gate, T), aux
 
     # -- expert-parallel shard_map implementation ----------------------------
 
@@ -309,11 +347,9 @@ class MoE:
             ye = jnp.moveaxis(ye.reshape(e_loc, n_ep, c_src, d), 1, 0)
             yb = jax.lax.all_to_all(ye, ep_axis, 0, 0, tiled=False)
             yb = yb.reshape(E, c_src, d)  # back at the source, per expert
-            yw = yb * buf_gate[..., None].astype(yb.dtype)
-            y = jnp.zeros((t_loc + 1, d), yb.dtype).at[
-                buf_tok.reshape(-1)].add(yw.reshape(-1, d))
+            y = self._combine_local(yb, buf_tok, buf_gate, t_loc)
             aux = {n: jax.lax.pmean(v, all_axes) for n, v in aux.items()}
-            return y[:t_loc].reshape(b, s, d), aux
+            return y.reshape(b, s, d), aux
 
         fn = shard_map(
             local_fn, mesh=mesh,

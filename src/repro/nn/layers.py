@@ -75,8 +75,12 @@ class Linear:
     def spec(self) -> dict:
         """Logical sharding axes per parameter (consumed by sharding.policy)."""
         if self.is_sparse:
-            # (n_rb, d_in_b, bL, bR): shard right-block dim like the output
-            s = {"w": (self.logical_axes[1], None, self.logical_axes[0], None)}
+            # (n_rb, d_in_b, bL, bR): the block-row dim carries the "slab"
+            # logical axis — the SAME rule that drives the shard_map
+            # partition of the junction compute, so the weight chunks a
+            # NamedSharding produces are exactly the per-device slabs the
+            # sharded csd_matmul expects (no resharding at entry)
+            s = {"w": ("slab", None, None, None)}
         else:
             s = {"w": self.logical_axes}
         if self.bias:
@@ -88,14 +92,28 @@ class Linear:
         """``activation(x @ W + b)``. For sparse junctions the bias and
         activation ride the fused ``csd_matmul`` epilogue (one kernel, no
         HBM round-trip of the pre-activation); dense junctions apply them
-        inline. ``activation`` is ``None | "relu" | "gelu"``."""
+        inline. ``activation`` is ``None | "relu" | "gelu"``.
+
+        Under a mesh whose rules resolve the ``"slab"`` axis (TRAIN and
+        SERVE both map it to ``model``), a partitionable sparse junction
+        transparently runs model-parallel: pattern + slab split across the
+        axis, FF column-parallel, BP psum'd, UP shard-local (see
+        ``kernels.ops``)."""
         w = params["w"]
         cdt = x.dtype
         if self.is_sparse:
+            from .common import junction_shard_kwargs, logical_to_spec
             b = params["b"].astype(cdt) if self.bias else None
+            kw = junction_shard_kwargs(self.pattern)
+            if kw:
+                # leading dims keep their batch sharding through the
+                # shard_map; the seq dim replicates over the slab axis
+                # (the Megatron-style all-gather at junction entry)
+                kw["lead_spec"] = tuple(logical_to_spec(
+                    *(("batch",) + (None,) * (x.ndim - 2))))
             return kops.csd_matmul(x, w.astype(cdt), self.pattern,
                                    bias=b, activation=activation,
-                                   backend=self.backend)
+                                   backend=self.backend, **kw)
         y = x @ w.astype(cdt)
         if self.bias:
             y = y + params["b"].astype(cdt)

@@ -14,9 +14,20 @@ lengths trace separate executables (the scheduler emits power-of-two
 chunks, so there are O(log prefill_chunk) of them). Prompt chunks are
 exact — never padded — so SSM recurrent state advances over real tokens
 only and stays bit-identical to a full-sequence prefill.
+
+Sharded decode (``mesh=...``): the engine jits ``LM.paged_step`` once
+under the SERVE mesh rules — params placed by ``policy.param_pspecs``
+(block-sparse slabs row-sharded on the ``slab`` axis so every junction
+runs the model-parallel ``csd_matmul`` shard_map), the paged KV pools
+partitioned on the same axis (``policy.paged_cache_pspecs``: pages are
+the cache's sequence axis -> context-parallel KV; pick ``total_pages ≡ -1
+mod axis_size`` so the +1 trash page divides). Scheduling stays on the
+host and is byte-identical to the single-device engine, so sharded decode
+is token-parity testable against it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -25,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..nn.common import dtype_of
+from ..nn.common import dtype_of, mesh_context
 from .scheduler import Request, Scheduler, StepPlan
 
 
@@ -51,7 +62,8 @@ class ServingEngine:
     (or ``run()``) and collect finished generations."""
 
     def __init__(self, model, params, config: Optional[EngineConfig] = None,
-                 *, key: Optional[jax.Array] = None, **overrides):
+                 *, key: Optional[jax.Array] = None, mesh=None, rules=None,
+                 **overrides):
         cfg = config or EngineConfig(**overrides)
         if overrides and config is not None:
             raise ValueError("pass EngineConfig or overrides, not both")
@@ -86,7 +98,8 @@ class ServingEngine:
             page_size=cfg.page_size,
             max_pages_per_seq=cfg.max_pages_per_seq,
             token_budget=cfg.token_budget,
-            prefill_chunk=cfg.prefill_chunk)
+            prefill_chunk=cfg.prefill_chunk,
+            window=self._reclaim_window(mc))
         self.cache = model.stack.init_paged_cache(
             cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc))
         self._next_id = 0
@@ -94,13 +107,53 @@ class ServingEngine:
         self.ttft: Dict[int, float] = {}
         self._t_added: Dict[int, float] = {}
 
+        self.mesh = mesh
+        self.rules = rules
+        if mesh is not None:
+            from ..sharding import policy
+            if rules is None:
+                self.rules = policy.rules_for("decode", cfg.max_slots,
+                                              mesh, mc)
+            pspec = policy.param_pspecs(model.spec(), self.rules)
+            self._param_sh = policy.named(mesh, pspec, params)
+            cspec = policy.paged_cache_pspecs(self.cache, self.rules)
+            self._cache_sh = policy.named(mesh, cspec, self.cache)
+            self.params = jax.device_put(params, self._param_sh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+
         def raw_step(params, cache, page_table, tokens, pos, n_new,
                      slot_ids):
             return model.paged_step(
                 params, tokens, pos, n_new, cache, page_table, slot_ids,
                 backend=cfg.backend, interpret=cfg.interpret)
 
-        self._step = jax.jit(raw_step, donate_argnums=(1,))
+        if mesh is not None:
+            # one executable per phase under the SERVE mesh: params and the
+            # paged pools keep their placement across steps, logits come
+            # back replicated for host-side sampling
+            self._step = jax.jit(
+                raw_step, donate_argnums=(1,),
+                in_shardings=(self._param_sh, self._cache_sh, None, None,
+                              None, None, None),
+                out_shardings=(None, self._cache_sh))
+        else:
+            self._step = jax.jit(raw_step, donate_argnums=(1,))
+
+    @staticmethod
+    def _reclaim_window(mc) -> Optional[int]:
+        """Sliding-window page reclamation is sound only when EVERY
+        attention layer is windowed (all page pools share one page table,
+        so a page may be freed only when no layer can still read it);
+        mamba layers carry no pages and don't constrain it."""
+        kinds = set(mc.layer_kinds)
+        if mc.attn_window is not None and kinds <= {"local", "mamba"} \
+                and "local" in kinds and mc.hybrid is None:
+            return int(mc.attn_window)
+        return None
+
+    def _in_ctx(self):
+        return mesh_context(self.mesh, self.rules) if self.mesh is not None \
+            else contextlib.nullcontext()
 
     # -- request intake ----------------------------------------------------
 
@@ -152,6 +205,10 @@ class ServingEngine:
     def step(self) -> Tuple[StepPlan, List[Tuple[int, np.ndarray]]]:
         """Run one engine step; returns (plan, finished) where finished is
         a list of (req_id, generated token ids)."""
+        with self._in_ctx():
+            return self._step_impl()
+
+    def _step_impl(self) -> Tuple[StepPlan, List[Tuple[int, np.ndarray]]]:
         cfg = self.config
         plan = self.sched.schedule()
 

@@ -15,9 +15,13 @@ Layout conventions shared with the model stack:
   from inactive batch rows, so the jitted step never branches on activity;
 * ``page_table`` is ``(slots, max_pages_per_seq)`` int32 with ``-1`` for
   unmapped entries; valid physical page ids are in ``[0, total_pages)``;
-* a sequence occupying ``n`` tokens owns pages ``0..ceil(n/page_size)-1``
-  of its table row, mapped in order — token position ``p`` lives at
-  ``(page_table[slot, p // page_size], p % page_size)``.
+* a sequence occupying ``n`` tokens maps the logical pages
+  ``first_page[slot] .. ceil(n/page_size)-1`` of its table row, in order —
+  token position ``p`` lives at ``(page_table[slot, p // page_size],
+  p % page_size)``. ``first_page`` is 0 until sliding-window reclamation
+  (``release_prefix``) frees fully-out-of-window leading pages; their
+  table entries return to ``-1`` (reads of those positions are masked by
+  the attention window, writes land on the trash page).
 """
 from __future__ import annotations
 
@@ -38,12 +42,13 @@ class PageState:
     seq_lens: jax.Array    # (slots,) int32 — tokens written per slot
     free_stack: jax.Array  # (total_pages,) int32 — free ids, top at count-1
     free_count: jax.Array  # () int32
+    first_page: jax.Array  # (slots,) int32 — first still-mapped logical page
 
     # -- pytree ------------------------------------------------------------
 
     def tree_flatten(self):
         return ((self.page_table, self.n_pages, self.seq_lens,
-                 self.free_stack, self.free_count), None)
+                 self.free_stack, self.free_count, self.first_page), None)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -76,20 +81,23 @@ def init_page_state(slots: int, total_pages: int,
         seq_lens=jnp.zeros((slots,), jnp.int32),
         free_stack=jnp.arange(total_pages, dtype=jnp.int32),
         free_count=jnp.asarray(total_pages, jnp.int32),
+        first_page=jnp.zeros((slots,), jnp.int32),
     )
 
 
 def alloc_pages(st: PageState, slot, n: int) -> PageState:
     """Pop ``n`` pages (static count) from the free list onto ``slot``'s
-    table, appended after its currently-mapped pages. The caller (the
-    scheduler) must guarantee ``free_count >= n`` and that the row has
-    room; this function does not check (it must stay jit-traceable)."""
+    table, appended after its currently-mapped pages (logical position
+    ``first_page + n_pages``). The caller (the scheduler) must guarantee
+    ``free_count >= n`` and that the row has room; this function does not
+    check (it must stay jit-traceable)."""
     if n == 0:
         return st
     ids = jax.lax.dynamic_slice(st.free_stack, (st.free_count - n,), (n,))
     row = jax.lax.dynamic_slice(st.page_table, (slot, 0),
                                 (1, st.max_pages_per_seq))[0]
-    row = jax.lax.dynamic_update_slice(row, ids, (st.n_pages[slot],))
+    row = jax.lax.dynamic_update_slice(
+        row, ids, (st.first_page[slot] + st.n_pages[slot],))
     table = jax.lax.dynamic_update_slice(st.page_table, row[None],
                                          (slot, 0))
     return dataclasses.replace(
@@ -102,10 +110,12 @@ def free_slot(st: PageState, slot) -> PageState:
     """Return all of ``slot``'s pages to the free list and clear its row."""
     m = st.max_pages_per_seq
     row = st.page_table[slot]                          # (m,)
-    owned = jnp.arange(m) < st.n_pages[slot]
+    lg = jnp.arange(m)
+    first = st.first_page[slot]
+    owned = (lg >= first) & (lg < first + st.n_pages[slot])
     # push owned ids above the current top; masked entries index OOB and
     # are dropped by the scatter
-    dst = jnp.where(owned, st.free_count + jnp.arange(m), st.total_pages)
+    dst = jnp.where(owned, st.free_count + lg - first, st.total_pages)
     stack = st.free_stack.at[dst].set(jnp.where(owned, row, 0),
                                       mode="drop")
     return dataclasses.replace(
@@ -114,7 +124,34 @@ def free_slot(st: PageState, slot) -> PageState:
         n_pages=st.n_pages.at[slot].set(0),
         seq_lens=st.seq_lens.at[slot].set(0),
         free_stack=stack,
-        free_count=st.free_count + st.n_pages[slot])
+        free_count=st.free_count + st.n_pages[slot],
+        first_page=st.first_page.at[slot].set(0))
+
+
+def release_prefix(st: PageState, slot, n: int) -> PageState:
+    """Sliding-window reclamation: return the first ``n`` still-mapped
+    logical pages of ``slot`` to the free list (their token positions have
+    fallen fully out of every attention window). Table entries revert to
+    ``-1``; ``first_page`` advances so later allocations keep appending at
+    the logical tail. ``n`` is a static (host-side) count."""
+    if n == 0:
+        return st
+    m = st.max_pages_per_seq
+    row = st.page_table[slot]
+    first = st.first_page[slot]
+    rel = jnp.arange(m) - first
+    dead = (rel >= 0) & (rel < n)
+    dst = jnp.where(dead, st.free_count + rel, st.total_pages)
+    stack = st.free_stack.at[dst].set(jnp.where(dead, row, 0),
+                                      mode="drop")
+    return dataclasses.replace(
+        st,
+        page_table=st.page_table.at[slot].set(
+            jnp.where(dead, -1, row)),
+        n_pages=st.n_pages.at[slot].add(-n),
+        free_stack=stack,
+        free_count=st.free_count + n,
+        first_page=st.first_page.at[slot].add(n))
 
 
 def advance(st: PageState, slot, n_tokens: int) -> PageState:

@@ -115,19 +115,29 @@ class Scheduler:
 
     def __init__(self, *, slots: int, total_pages: int, page_size: int,
                  max_pages_per_seq: int, token_budget: int,
-                 prefill_chunk: int):
+                 prefill_chunk: int, window: Optional[int] = None):
         if prefill_chunk < 1 or token_budget < 1:
             raise ValueError("prefill_chunk and token_budget must be >= 1")
+        if window is not None and window < 1:
+            raise ValueError("window must be >= 1 (or None)")
         self.page_size = page_size
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
+        # sliding-window page reclamation: when every attention layer's
+        # window is <= ``window``, pages whose tokens have all fallen out
+        # of the window are freed eagerly after each advance — fixed-pool
+        # occupancy per sequence becomes O(window), not O(seq_len). (The
+        # table ROW still spans the logical length, so max_pages_per_seq
+        # continues to bound sequence length; it's pool pressure —
+        # admissions/preemptions — that the window relieves.)
+        self.window = window
         self.state: PageState = kv_cache.init_page_state(
             slots, total_pages, max_pages_per_seq)
         self.waiting: Deque[Request] = deque()
         self.active: List[Optional[ActiveSeq]] = [None] * slots
         self._admit_counter = 0
         self.stats = {"admitted": 0, "preempted": 0, "finished": 0,
-                      "steps": 0}
+                      "steps": 0, "reclaimed_pages": 0}
         # host-side mirrors of the PageState counters: every read on the
         # per-token scheduling path uses these (a device sync per read
         # would put O(slots) round-trips on the decode hot path); the jnp
@@ -136,6 +146,7 @@ class Scheduler:
         self._free = total_pages
         self._n_pages = [0] * slots
         self._seq_lens = [0] * slots
+        self._first_page = [0] * slots
 
     # -- bookkeeping the engine reports back ------------------------------
 
@@ -151,6 +162,7 @@ class Scheduler:
         seq.n_prefilled += n
         self.state = kv_cache.advance(self.state, slot, n)
         self._seq_lens[slot] += n
+        self._reclaim(slot)
 
     def append_token(self, slot: int, token: int) -> None:
         """Record a sampled token (after prefill completes or a decode)."""
@@ -163,6 +175,30 @@ class Scheduler:
         seq.n_prefilled += 1
         self.state = kv_cache.advance(self.state, slot, 1)
         self._seq_lens[slot] += 1
+        self._reclaim(slot)
+
+    def _reclaim(self, slot: int) -> None:
+        """Free leading pages whose tokens are out of every window.
+
+        With L tokens cached, every future query (decode at position >= L,
+        or the next prefill chunk starting at L) attends key positions
+        ``kpos > pos - window >= L - window`` — positions ``0 .. L-window``
+        (count ``L - window + 1``) are dead, and any page lying entirely
+        below that boundary is returned to the pool."""
+        if self.window is None:
+            return
+        dead_tokens = self._seq_lens[slot] - self.window + 1
+        if dead_tokens <= 0:
+            return
+        target_first = dead_tokens // self.page_size
+        n = target_first - self._first_page[slot]
+        if n <= 0:
+            return
+        self.state = kv_cache.release_prefix(self.state, slot, n)
+        self._first_page[slot] = target_first
+        self._n_pages[slot] -= n
+        self._free += n
+        self.stats["reclaimed_pages"] += n
 
     def finish(self, slot: int) -> Tuple[Request, np.ndarray]:
         """Release the slot; returns (request, generated token ids)."""
@@ -180,17 +216,21 @@ class Scheduler:
         self._free += self._n_pages[slot]
         self._n_pages[slot] = 0
         self._seq_lens[slot] = 0
+        self._first_page[slot] = 0
 
     def _pages_for(self, slot: int, new_len: int) -> int:
-        """Additional pages needed for ``slot`` to hold ``new_len`` tokens."""
-        have = self._n_pages[slot]
+        """Additional pages needed for ``slot`` to hold ``new_len`` tokens.
+        The logical extent already mapped is ``first_page + n_pages``
+        (window-reclaimed leading pages count: their positions are dead)."""
+        have = self._first_page[slot] + self._n_pages[slot]
         return max(0, kv_cache.pages_needed(new_len, self.page_size) - have)
 
     def _try_alloc(self, slot: int, need: int,
                    protected: set, preempted: List[int]) -> bool:
         """Allocate ``need`` pages for ``slot``, preempting younger,
         unprotected sequences if the pool is exhausted."""
-        if self._n_pages[slot] + need > self.state.max_pages_per_seq:
+        if self._first_page[slot] + self._n_pages[slot] + need \
+                > self.state.max_pages_per_seq:
             raise RuntimeError(
                 f"slot {slot} exceeds max_pages_per_seq="
                 f"{self.state.max_pages_per_seq}")
@@ -317,6 +357,8 @@ class Scheduler:
             "n_pages mirror diverged"
         assert list(np.asarray(st.seq_lens)) == self._seq_lens, \
             "seq_lens mirror diverged"
+        assert list(np.asarray(st.first_page)) == self._first_page, \
+            "first_page mirror diverged"
         owned = int(np.sum(np.asarray(st.n_pages)))
         assert free_n + owned == total, \
             f"page leak: free={free_n} owned={owned} total={total}"
@@ -324,14 +366,23 @@ class Scheduler:
         assert len(seen) == free_n, "duplicate ids on the free stack"
         table = np.asarray(st.page_table)
         n_pages = np.asarray(st.n_pages)
+        first = np.asarray(st.first_page)
         for i in range(st.slots):
-            row = table[i][:n_pages[i]]
+            lo, hi = int(first[i]), int(first[i] + n_pages[i])
+            row = table[i][lo:hi]
             assert (row >= 0).all() and (row < total).all(), \
                 f"slot {i} maps invalid pages {row}"
             for p in row.tolist():
                 assert p not in seen, f"page {p} double-mapped"
                 seen.add(p)
-            assert (table[i][n_pages[i]:] == -1).all(), \
-                f"slot {i} has mapped pages beyond n_pages"
-            assert int(st.seq_lens[i]) <= int(n_pages[i]) * self.page_size
+            assert (table[i][:lo] == -1).all(), \
+                f"slot {i} has mapped pages below first_page"
+            assert (table[i][hi:] == -1).all(), \
+                f"slot {i} has mapped pages beyond its extent"
+            assert int(st.seq_lens[i]) <= hi * self.page_size
+            if self.window is not None and n_pages[i] > 0:
+                # reclamation keeps every in-window position mapped
+                dead = int(st.seq_lens[i]) - self.window + 1
+                assert lo * self.page_size <= max(0, dead), \
+                    f"slot {i} reclaimed live pages"
         assert seen == set(range(total)), "pages lost from the pool"

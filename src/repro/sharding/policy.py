@@ -47,6 +47,12 @@ TRAIN_RULES = {
     "batch": ("pod", "data"),
     "seq": "model",
     "kv_seq": None,
+    # block-sparse junction slabs: the (n_rb, d_in_b, bL, bR) weight's
+    # block-row dim AND the shard_map partition of the junction compute
+    # (kernels.ops sharded csd_matmul). One rule drives both, so the
+    # storage chunks and the per-device patterns always line up; dw/db
+    # come back shard-local, which keeps Adam state sharded ZeRO-style.
+    "slab": "model",
 }
 
 SERVE_RULES = {
@@ -62,6 +68,9 @@ SERVE_RULES = {
     "batch": ("pod", "data"),
     "seq": None,
     "kv_seq": "model",
+    # decode runs the same sharded junctions as training (TP FFN = the
+    # column-parallel FF shard); see TRAIN_RULES["slab"]
+    "slab": "model",
 }
 
 LONG_RULES = dict(SERVE_RULES, batch=None, kv_seq=("data", "model"))
@@ -102,6 +111,8 @@ def rules_for(kind: str, global_batch: int, mesh: Mesh,
                 rules["qheads"] = None
                 rules["kvheads"] = None
                 rules["vocab"] = None
+                # no tensor axis left for the junction shard_map either
+                rules["slab"] = None
     else:
         data_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
                                  if a in ("pod", "data")]))
@@ -169,6 +180,32 @@ def cache_pspecs(cache_shapes: Any, rules: dict) -> Any:
                 P(b, None, None)
         if rank == 0:
             return P()
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def paged_cache_pspecs(cache_shapes: Any, rules: dict) -> Any:
+    """Sharding for a *paged* KV/SSM cache pytree (serving engine).
+
+    k_pages/v_pages: (P+1, page, Hkv, Dh) or (G, ...)  -> pages shard over
+    ``kv_seq`` (context-parallel KV: pages ARE the cache's sequence axis;
+    choose ``total_pages ≡ -1 mod axis_size`` so P+1 divides — otherwise
+    ``sanitize`` falls back to replication on that dim).
+    SSM state (ssd/conv, slot-major) and page tables stay replicated: the
+    per-slot recurrent state is tiny and the gather/scatter by slot id is
+    host-driven.
+    """
+    s = rules.get("kv_seq")
+
+    def leaf(path, x):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        rank = len(x.shape)
+        if "k_pages" in names or "v_pages" in names:
+            if rank == 4:
+                return P(s, None, None, None)
+            if rank == 5:
+                return P(None, s, None, None, None)
         return P(*([None] * rank))
 
     return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

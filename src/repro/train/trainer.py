@@ -11,7 +11,14 @@ Distributed-optimization tricks implemented here (DESIGN.md §5):
 * DiLoCo outer loop (``diloco_period``): pods run local AdamW and exchange
   int8 error-feedback-compressed parameter deltas every K steps — cutting
   inter-pod (DCN) traffic by ~4x/K vs per-step gradient all-reduce;
-* donated buffers: params/opt-state update in place.
+* donated buffers: params/opt-state update in place;
+* sharded sparse junctions: the TRAIN rules map the ``"slab"`` logical
+  axis to ``model``, so ``param_pspecs`` chunks every block-sparse weight
+  slab (and its mirrored Adam state) on the block-row dim, and the jitted
+  step — traced under ``mesh_context`` — runs those junctions through the
+  model-parallel ``csd_matmul`` shard_map. UP (dw/db) is shard-local
+  there, so the sharded optimizer state updates without any gradient
+  collectives on the slab weights (ZeRO-style for free).
 """
 from __future__ import annotations
 

@@ -76,11 +76,12 @@ def test_csd_spmm_backward_kernels_match_xla_paths(case):
                           (bp.n_rb, bp.d_in_b, bl, br))
     dx = csd_spmm.csd_spmm_dx(dy, w, bp.out_idx, bp.out_slot, block_m=bm,
                               interpret=True)
-    np.testing.assert_allclose(dx, ops._xla_dx(dy, w, pat), atol=2e-5,
+    np.testing.assert_allclose(dx, ops._xla_dx(dy, w, pat.out_idx, pat.out_slot), atol=2e-5,
                                rtol=2e-5)
     dw = csd_spmm.csd_spmm_dw(x, dy, bp.block_idx, block_in=bl,
                               block_out=br, block_m=bm, interpret=True)
-    np.testing.assert_allclose(dw, ops._xla_dw(x, dy, pat), atol=2e-5,
+    np.testing.assert_allclose(dw, ops._xla_dw(x, dy, pat.block_idx, pat.block_in,
+                                            pat.block_out), atol=2e-5,
                                rtol=2e-5)
 
 

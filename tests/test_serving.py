@@ -191,6 +191,119 @@ def test_scheduler_no_page_leaks_across_admit_evict_preempt(case):
         assert sched.state.free() == total_pages
 
 
+@settings(max_examples=20, deadline=None)
+@given(scheduler_cases())
+def test_windowed_scheduler_reclaims_without_leaks_or_double_frees(case):
+    """The sliding-window reclamation property test: same random driver
+    as above but with a window installed — ``check_invariants`` now also
+    asserts no live (in-window) page is ever reclaimed, and the pool must
+    still fully drain (every reclaimed page returned exactly once)."""
+    slots, total_pages, page_size, max_pages, budget, chunk, n_reqs, seed \
+        = case
+    rng = np.random.default_rng(seed)
+    window = int(rng.integers(1, 2 * page_size + 1))
+    cap = min(max_pages, total_pages) * page_size
+    sched = Scheduler(slots=slots, total_pages=total_pages,
+                      page_size=page_size, max_pages_per_seq=max_pages,
+                      token_budget=budget, prefill_chunk=chunk,
+                      window=window)
+    for i in range(n_reqs):
+        plen = int(rng.integers(1, max(2, cap - 1)))
+        gen = int(rng.integers(1, max(2, cap - plen)))
+        sched.add(Request(req_id=i, prompt=rng.integers(0, 99, plen),
+                          max_new_tokens=gen))
+    for _ in range(500):
+        if not sched.has_work():
+            break
+        plan = sched.schedule()
+        sched.check_invariants()
+        for slot, start, toks in plan.prefills:
+            seq = sched.active[slot]
+            sched.advance_prefill(slot, len(toks))
+            sched.check_invariants()
+            if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
+                sched.append_token(slot, int(rng.integers(0, 99)))
+        for slot in plan.decode_slots:
+            sched.note_decoded(slot)
+            sched.check_invariants()
+            sched.append_token(slot, int(rng.integers(0, 99)))
+        for slot in range(slots):
+            seq = sched.active[slot]
+            if seq is not None and seq.done:
+                sched.finish(slot)
+        sched.check_invariants()
+        if plan.n_tokens == 0 and not plan.admitted:
+            break
+    sched.check_invariants()
+    if not any(s is not None for s in sched.active) and not sched.waiting:
+        assert sched.state.free() == total_pages
+
+
+def test_windowed_page_occupancy_stays_bounded():
+    """A long decode against a small window holds O(window) pages, not
+    O(seq_len): the reclamation actually frees the out-of-window prefix."""
+    page_size, window = 4, 8
+    sched = Scheduler(slots=1, total_pages=64, page_size=page_size,
+                      max_pages_per_seq=64, token_budget=4,
+                      prefill_chunk=4, window=window)
+    sched.add(Request(req_id=0, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=120))
+    steps = 0
+    max_resident = 0
+    while sched.has_work() and steps < 400:
+        plan = sched.schedule()
+        for slot, start, toks in plan.prefills:
+            sched.advance_prefill(slot, len(toks))
+            seq = sched.active[slot]
+            if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
+                sched.append_token(slot, 1)
+        for slot in plan.decode_slots:
+            sched.note_decoded(slot)
+            sched.append_token(slot, 1)
+        if sched.active[0] is not None:
+            max_resident = max(max_resident, sched._n_pages[0])
+        for slot in range(1):
+            seq = sched.active[slot]
+            if seq is not None and seq.done:
+                sched.finish(slot)
+        sched.check_invariants()
+        steps += 1
+    assert not sched.has_work()
+    assert sched.stats["reclaimed_pages"] > 20
+    # window w spans at most ceil(w/page)+1 pages, +1 for the write head
+    assert max_resident <= window // page_size + 2
+    assert sched.state.free() == 64
+
+
+def test_engine_sliding_window_reclamation_token_parity():
+    """An all-local (fixed-window) model serves through the engine with
+    window reclamation active, and stays token-identical to the
+    full-recompute oracle while actually freeing out-of-window pages."""
+    cfg = _tiny_cfg(sparse=False, layer_pattern=("local",), attn_window=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (9, 4)]
+    eng = _check_engine_parity(
+        model, params, prompts, 24,
+        EngineConfig(max_slots=2, page_size=4, total_pages=16,
+                     max_pages_per_seq=16, token_budget=12,
+                     prefill_chunk=8, backend="xla"))
+    assert eng.sched.window == 6
+    assert eng.sched.stats["reclaimed_pages"] > 0
+
+
+def test_engine_reclaim_window_disabled_for_global_layers():
+    """Any global (unwindowed) attention layer shares the page table, so
+    reclamation must stay off — its pages are live forever."""
+    from repro.serving.engine import ServingEngine as SE
+    cfg = _tiny_cfg(local_global_ratio=1, attn_window=8)
+    assert SE._reclaim_window(cfg) is None
+    cfg2 = _tiny_cfg(layer_pattern=("local",), attn_window=8)
+    assert SE._reclaim_window(cfg2) == 8
+
+
 # ---------------------------------------------------------------------------
 # paged decode kernel
 # ---------------------------------------------------------------------------

@@ -168,3 +168,86 @@ def test_batched_csd_matmul_grad_matches_ref_oracle(case):
 @settings(max_examples=15, deadline=None)
 def test_batched_csd_matmul_grad_matches_ref_oracle_wide(case):
     _check_batched_case(case)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward epilogue: the Pallas BP/UP kernels mask the cotangent
+# in-kernel (and fold db into the UP sweep). Kernel-level parity against
+# the XLA fallback's mask-then-sweep form, which is the unchanged
+# semantic reference. (The property sweeps above already certify the
+# end-to-end grads through both backends; this pins the kernel surface.)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batched", [False, True],
+                         ids=["unbatched", "batched"])
+@pytest.mark.parametrize("activation", ["relu", "gelu"])
+def test_fused_backward_epilogue_kernels_match_masked_xla(
+        batched, activation):
+    from repro.kernels.csd_spmm import csd_spmm_dx, csd_spmm_dw
+    bl = br = 4
+    bp = make_block_pattern(3 * bl, 4 * br, 0.5, block_in=bl, block_out=br,
+                            seed=1)
+    rng = np.random.default_rng(2)
+    lead = (2,) if batched else ()
+    m = 6
+    x = jnp.asarray(rng.normal(size=lead + (m, bp.n_in)), jnp.float32)
+    w = jnp.asarray(rng.normal(
+        size=lead + (bp.n_rb, bp.d_in_b, bl, br)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=lead + (m, bp.n_out)), jnp.float32)
+    if batched:
+        z = jax.vmap(lambda xe, we: block_gather_ref(
+            xe, we, bp.block_idx, bl, br))(x, w)
+    else:
+        z = block_gather_ref(x, w, bp.block_idx, bl, br)
+    y = apply_activation(z, activation)
+    aux = y if activation == "relu" else z
+
+    dym = ops._mask_dy_xla(dy, aux, activation)
+    if batched:
+        dx_ref = jax.vmap(lambda de, we: ops._xla_dx(
+            de, we, bp.out_idx, bp.out_slot))(dym, w)
+        dw_ref = jax.vmap(lambda xe, de: ops._xla_dw(
+            xe, de, bp.block_idx, bl, br))(x, dym)
+        db_ref = jnp.sum(dym, axis=1)
+    else:
+        dx_ref = ops._xla_dx(dym, w, bp.out_idx, bp.out_slot)
+        dw_ref = ops._xla_dw(x, dym, bp.block_idx, bl, br)
+        db_ref = jnp.sum(dym, axis=0)
+
+    dx = csd_spmm_dx(dy, w, bp.out_idx, bp.out_slot, aux=aux,
+                     activation=activation, block_m=2, interpret=True)
+    dw, db = csd_spmm_dw(x, dy, bp.block_idx, block_in=bl, block_out=br,
+                         aux=aux, activation=activation, want_db=True,
+                         block_m=2, interpret=True)
+    np.testing.assert_allclose(dx, dx_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(dw, dw_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(db, db_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_backward_db_ignores_padding_rows():
+    """Padded-M regression for the in-kernel db: cotangent padding rows
+    are zero, so db must equal the unpadded reduction even though the
+    padded y/preact rows are nonzero (bias + activation of zero x)."""
+    from repro.kernels.csd_spmm import csd_spmm_dw
+    bl = br = 4
+    bp = make_block_pattern(2 * bl, 3 * br, 0.5, block_in=bl, block_out=br)
+    rng = np.random.default_rng(3)
+    m, block_m = 3, 4
+    pad = block_m - m
+    x = jnp.asarray(rng.normal(size=(m, bp.n_in)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(bp.n_rb, bp.d_in_b, bl, br)),
+                    jnp.float32)
+    b = jnp.asarray(rng.normal(size=(bp.n_out,)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(m, bp.n_out)), jnp.float32)
+    z = block_gather_ref(x, w, bp.block_idx, bl, br) + b
+    y = apply_activation(z, "relu")
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    zp = block_gather_ref(xp, w, bp.block_idx, bl, br) + b  # pad rows != 0
+    yp = apply_activation(zp, "relu")
+    dyp = jnp.pad(dy, ((0, pad), (0, 0)))
+    _, db = csd_spmm_dw(xp, dyp, bp.block_idx, block_in=bl, block_out=br,
+                        aux=yp, activation="relu", want_db=True,
+                        block_m=block_m, interpret=True)
+    db_ref = jnp.sum(ops._mask_dy_xla(dy, y, "relu"), axis=0)
+    np.testing.assert_allclose(db, db_ref, atol=1e-4, rtol=1e-4)
