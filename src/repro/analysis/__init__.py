@@ -1,0 +1,16 @@
+"""sparselint — static certifier for the jax_pallas sparse stack.
+
+Three passes (see ``repro.analysis.lint`` for the CLI):
+
+* ``grid_pass``    — SL1xx Pallas grid/race/VMEM analysis
+* ``jaxpr_pass``   — SL2xx jitted-hot-path lint (donation, collectives)
+* ``pattern_pass`` — SL3xx BlockPattern/partition invariants
+
+Submodules import jax lazily where the CLI needs to configure the
+platform first; import them explicitly (``from repro.analysis import
+pattern_pass``) rather than through package attributes.
+"""
+
+from .findings import Finding, Report, Suppression, apply_suppressions
+
+__all__ = ["Finding", "Report", "Suppression", "apply_suppressions"]

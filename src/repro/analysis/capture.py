@@ -1,0 +1,134 @@
+"""Capture harness: record ``pl.pallas_call`` launch specs without running.
+
+The grid pass needs the *real* grids, BlockSpecs and index maps the shipped
+kernel entry points construct — not a hand-maintained mirror that silently
+drifts. We get them by patching ``pallas.pallas_call`` while invoking the
+entry function with representative operands: the patched call records the
+grid spec plus the concrete operands and aborts the launch by raising a
+control-flow exception before anything executes. This is the software
+analogue of extracting the address-generator netlist from the synthesized
+design instead of re-deriving it from the HDL by hand.
+
+Index maps are then *evaluated on the host* for every grid point (with the
+actual scalar-prefetch operands — the pattern arrays — passed through,
+exactly as Mosaic's scalar prefetch would), which is what makes the race /
+divisibility / epilogue checks exact rather than heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+class _CaptureSignal(Exception):
+    """Control-flow: carries the captured launch out of the entry fn."""
+
+    def __init__(self, launch: "CapturedLaunch"):
+        super().__init__("pallas_call captured")
+        self.launch = launch
+
+
+def _aval(x) -> Tuple[Tuple[int, ...], Any]:
+    shape = tuple(int(d) for d in x.shape)
+    return shape, np.dtype(getattr(x, "dtype", np.float32))
+
+
+@dataclasses.dataclass
+class CapturedLaunch:
+    """One recorded ``pl.pallas_call`` invocation."""
+
+    name: str
+    grid: Tuple[int, ...]
+    in_specs: List[pl.BlockSpec]
+    out_specs: List[pl.BlockSpec]
+    out_shapes: List[Tuple[Tuple[int, ...], Any]]   # (shape, dtype)
+    in_shapes: List[Tuple[Tuple[int, ...], Any]]    # post-prefetch operands
+    scalar_args: List[np.ndarray]                   # prefetched operands
+    scratch_shapes: List[Tuple[Tuple[int, ...], Any]]
+    num_scalar_prefetch: int
+
+    @property
+    def n_steps(self) -> int:
+        return int(np.prod(self.grid)) if self.grid else 1
+
+    def eval_index_map(self, spec: pl.BlockSpec,
+                       step: Sequence[int]) -> Tuple[int, ...]:
+        """Evaluate one BlockSpec's index map at a grid point, feeding the
+        scalar-prefetch operands through (their refs ARE the host arrays
+        here). Returns concrete block coordinates."""
+        out = spec.index_map(*step, *self.scalar_args)
+        if not isinstance(out, tuple):
+            out = (out,)
+        return tuple(int(i) for i in out)
+
+
+def _as_list(specs) -> list:
+    if specs is None:
+        return []
+    if isinstance(specs, (list, tuple)):
+        return list(specs)
+    return [specs]
+
+
+def _scratch_aval(s) -> Tuple[Tuple[int, ...], Any]:
+    # pltpu.VMEM(...) scratch entries are MemoryRef-like: shape + dtype
+    shape = tuple(int(d) for d in s.shape)
+    return shape, np.dtype(s.dtype)
+
+
+def capture_launch(fn: Callable, *args, name: Optional[str] = None,
+                   **kwargs) -> CapturedLaunch:
+    """Run ``fn(*args, **kwargs)`` with ``pl.pallas_call`` patched to record
+    its launch spec; returns the first launch. The kernel never executes.
+    """
+    recorded: List[CapturedLaunch] = []
+    real = pl.pallas_call
+
+    def fake_pallas_call(kernel, *, grid_spec=None, grid=None, in_specs=None,
+                         out_specs=None, out_shape=None, scratch_shapes=(),
+                         interpret=False, **extra):
+        nsp = 0
+        if grid_spec is not None:
+            grid_ = tuple(grid_spec.grid)
+            ins = _as_list(grid_spec.in_specs)
+            outs = _as_list(grid_spec.out_specs)
+            nsp = int(getattr(grid_spec, "num_scalar_prefetch", 0) or 0)
+            scratch = _as_list(getattr(grid_spec, "scratch_shapes", ()) or ())
+        else:
+            grid_ = tuple(grid) if grid is not None else ()
+            ins = _as_list(in_specs)
+            outs = _as_list(out_specs)
+            scratch = _as_list(scratch_shapes)
+        oshapes = [_aval(s) for s in _as_list(out_shape)]
+
+        def runner(*operands):
+            scal = [np.asarray(o) for o in operands[:nsp]]
+            launch = CapturedLaunch(
+                name=name or getattr(kernel, "__name__",
+                                     getattr(getattr(kernel, "func", None),
+                                             "__name__", "kernel")),
+                grid=grid_, in_specs=ins, out_specs=outs,
+                out_shapes=oshapes,
+                in_shapes=[_aval(o) for o in operands[nsp:]],
+                scalar_args=scal,
+                scratch_shapes=[_scratch_aval(s) for s in scratch],
+                num_scalar_prefetch=nsp)
+            recorded.append(launch)
+            raise _CaptureSignal(launch)
+
+        return runner
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        fn(*args, **kwargs)
+    except _CaptureSignal:
+        pass
+    finally:
+        pl.pallas_call = real
+    if not recorded:
+        raise RuntimeError(
+            f"{fn!r} made no pallas_call — nothing to analyze")
+    return recorded[0]

@@ -1,0 +1,128 @@
+"""Finding model shared by every sparselint pass.
+
+Each finding carries a stable *code* (``SL1xx`` grid pass, ``SL2xx`` jaxpr
+pass, ``SL3xx`` pattern pass), a *subject* (the kernel case / config /
+pattern it was found in) and a human message. Codes are the unit of
+suppression: a suppression entry names a code plus a subject substring and
+a justification, and suppressed findings stay in the report (marked) but
+do not fail the lint — the same contract as the FPGA flow the paper's
+companion hardware uses, where every waived timing/bank check must carry a
+sign-off note.
+
+Code map (kept in sync with README.md "Static certification"):
+
+=====  =====================================================================
+SL101  output-tile aliasing: two non-consecutive grid steps write one tile
+SL102  BlockSpec block shape does not divide the bound array dimension
+SL103  fused epilogue does not fire exactly once, on the last fan-in slot
+SL104  per-grid-step VMEM working set exceeds the budget
+SL105  index map addresses a block outside the bound array
+SL201  host-sync op (callback/infeed) inside a jitted hot path
+SL202  large non-donated input buffer in a step executable
+SL203  unintended wide-dtype promotion (float64/complex128) in a hot path
+SL204  large closure-captured constant baked into the traced program
+SL205  shard_map body lacks the collective its out-spec replication implies
+SL301  duplicate edge: one left block feeds the same right block twice
+SL302  coverage hole: a left/right block with no surviving edges
+SL303  scatter form (out_idx/out_slot/out_valid) disagrees with gather form
+SL304  degree bound violation vs the paper's structured-sparsity constraint
+SL305  per-shard slot counts unbalanced (SPMD shards would diverge in work)
+=====  =====================================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+# (code, subject substring, justification) entries mark findings as waived.
+Suppression = Tuple[str, str, str]
+
+
+@dataclasses.dataclass
+class Finding:
+    code: str           # e.g. "SL101"
+    subject: str        # kernel case / config / pattern identifier
+    message: str
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    suppressed: bool = False
+    justification: Optional[str] = None
+
+    def key(self) -> str:
+        return f"{self.code}:{self.subject}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {"code": self.code, "subject": self.subject,
+             "message": self.message, "detail": self.detail}
+        if self.suppressed:
+            d["suppressed"] = True
+            d["justification"] = self.justification
+        return d
+
+
+def apply_suppressions(findings: Sequence[Finding],
+                       suppressions: Sequence[Suppression]) -> List[Finding]:
+    """Mark findings matched by a (code, subject-substring) entry."""
+    out = []
+    for f in findings:
+        for code, subj, why in suppressions:
+            if f.code == code and subj in f.subject:
+                f = dataclasses.replace(f, suppressed=True,
+                                        justification=why)
+                break
+        out.append(f)
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    """Full lint run result: findings plus per-kernel cost estimates."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    # kernel case name -> CostEstimate-style dict (grid, steps, flops
+    # lower bound where known, bytes streamed, per-step VMEM bytes)
+    cost: Dict[str, Dict[str, Any]] = dataclasses.field(default_factory=dict)
+    # pass name -> list of subjects covered (so "no findings" is
+    # distinguishable from "never ran")
+    covered: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: Sequence[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "findings": [f.to_dict() for f in self.findings],
+            "n_findings": len(self.findings),
+            "n_unsuppressed": len(self.unsuppressed()),
+            "cost": self.cost,
+            "covered": self.covered,
+            "errors": self.errors,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, default=str)
+
+    def to_text(self) -> str:
+        lines = []
+        for f in self.findings:
+            tag = " [suppressed: %s]" % f.justification if f.suppressed \
+                else ""
+            lines.append(f"{f.code} {f.subject}: {f.message}{tag}")
+            for k, v in f.detail.items():
+                lines.append(f"    {k}: {v}")
+        for name, cost in sorted(self.cost.items()):
+            lines.append(f"cost {name}: " + ", ".join(
+                f"{k}={v}" for k, v in cost.items()))
+        for p, subjects in sorted(self.covered.items()):
+            lines.append(f"covered[{p}]: {len(subjects)} subjects")
+        for e in self.errors:
+            lines.append(f"error: {e}")
+        n_sup = len(self.findings) - len(self.unsuppressed())
+        lines.append(
+            f"sparselint: {len(self.unsuppressed())} finding(s), "
+            f"{n_sup} suppressed")
+        return "\n".join(lines)

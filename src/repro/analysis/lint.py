@@ -1,0 +1,107 @@
+"""sparselint CLI: ``python -m repro.analysis.lint``.
+
+Runs the three static passes over every shipped kernel and registered
+config, on CPU, with no TPU time:
+
+* grid pass  — SL1xx: Pallas grid races / divisibility / epilogue / VMEM
+* jaxpr pass — SL2xx: host sync, donation, dtype creep, baked constants,
+               shard_map missing collectives (forced 8-device mesh)
+* pattern pass — SL3xx: BlockPattern / partition invariants
+
+Exits non-zero on any unsuppressed finding or any pass error (a hot path
+the linter cannot trace is not a certified hot path). ``--selftest-inject``
+adds a deliberately race-broken copy of ``csd_spmm_fwd`` to the grid pass
+and must make the lint fail — CI runs it to prove the gate has teeth.
+
+The forced-host-device environment (``--devices``, default 8) is set up
+*before* jax is imported, which is why every pass imports jax lazily. When
+jax is already imported (library use, pytest), the flag cannot take effect
+and the sharded-path lint degrades gracefully (reported as an error unless
+enough devices already exist).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+
+def _force_devices(n: int) -> None:
+    if "jax" in sys.modules:
+        return  # too late; jaxpr pass will report if devices are short
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in prev:
+        os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static certifier for Pallas grids, BlockPattern "
+                    "invariants, and sharded-junction collectives")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None,
+                    help="write the report to this file as well as stdout")
+    ap.add_argument("--passes", default="grid,jaxpr,pattern",
+                    help="comma list from {grid,jaxpr,pattern}")
+    ap.add_argument("--configs", default=None,
+                    help="comma list of arch names (default: all registered)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="grid-pass VMEM budget in bytes (default 8 MiB)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count for the sharded lint")
+    ap.add_argument("--no-suppress", action="store_true",
+                    help="ignore the checked-in suppression table")
+    ap.add_argument("--selftest-inject", action="store_true",
+                    help="add a race-broken kernel copy; lint MUST fail")
+    args = ap.parse_args(argv)
+
+    _force_devices(args.devices)
+
+    # deferred so _force_devices precedes the first jax import
+    from . import grid_pass, jaxpr_pass, pattern_pass
+    from .findings import Report, apply_suppressions
+    from .suppressions import SUPPRESSIONS
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = set(passes) - {"grid", "jaxpr", "pattern"}
+    if unknown:
+        ap.error(f"unknown pass(es): {sorted(unknown)}")
+    configs = [c.strip() for c in args.configs.split(",")] \
+        if args.configs else None
+
+    report = Report()
+    if "grid" in passes:
+        budget = args.vmem_budget or grid_pass.DEFAULT_VMEM_BUDGET
+        f, cost, covered = grid_pass.run(vmem_budget=budget,
+                                         inject=args.selftest_inject)
+        report.extend(f)
+        report.cost.update(cost)
+        report.covered["grid"] = covered
+    if "pattern" in passes:
+        f, covered = pattern_pass.run(configs)
+        report.extend(f)
+        report.covered["pattern"] = covered
+    if "jaxpr" in passes:
+        f, covered, errors = jaxpr_pass.run(configs)
+        report.extend(f)
+        report.covered["jaxpr"] = covered
+        report.errors.extend(errors)
+
+    if not args.no_suppress:
+        report.findings = apply_suppressions(report.findings, SUPPRESSIONS)
+
+    out = report.to_json() if args.format == "json" else report.to_text()
+    print(out)
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(out + "\n")
+
+    return 1 if (report.unsuppressed() or report.errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,243 @@
+"""Pass 3 — BlockPattern / PartitionedPattern invariant checks.
+
+These are the software form of the constraints the paper's hardware flow
+certifies before synthesis: the interleaver (pattern) must be clash-free,
+every neuron (block) must stay connected, and parallel lanes (shards) must
+carry equal work. A pattern violating them doesn't crash — it trains to a
+silently wrong or silently slower model — which is why the checks run
+statically here and (behind ``debug=True``) at pattern construction time.
+
+Checks:
+
+* **SL301** — duplicate edge: one right block lists the same left block in
+  two fan-in slots (gather form), or the scatter form emits one (right
+  block, slot) cell twice. The MXU tile would be applied twice: wrong
+  math, and the clash-free generator's whole point defeated.
+* **SL302** — coverage hole: a left block feeding nothing or a right block
+  fed by nothing (dead neurons by construction — §III's generators
+  guarantee full coverage).
+* **SL303** — scatter/gather disagreement: ``out_idx``/``out_slot`` (with
+  ``out_valid`` honored) must be exactly the transpose of ``block_idx``.
+  dx/BP consume the scatter form while FF consumes the gather form; a
+  mismatch means forward and backward silently use different networks.
+* **SL304** — degree/bounds: indices within range, fan-in degree uniform
+  and ≤ n_lb, matching the structured-sparsity constraint (d_in fixed per
+  junction) the paper's Appendix A density quantization assumes.
+* **SL305** — shard imbalance: per-shard valid-slot counts must be equal
+  (every SPMD shard runs the same program; unequal slot counts mean the
+  padded width d_loc hides idle work on some devices and the slab
+  row-split no longer matches ``NamedSharding``'s equal chunks).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .findings import Finding
+
+
+def check_pattern(bp, subject: str) -> List[Finding]:
+    """All single-pattern invariants for one ``BlockPattern``."""
+    f: List[Finding] = []
+    n_lb, n_rb = bp.n_lb, bp.n_rb
+    idx = np.asarray(bp.block_idx)
+
+    # SL304: shape + range sanity first — later checks assume it
+    if idx.ndim != 2 or idx.shape[0] != n_rb:
+        f.append(Finding("SL304", subject,
+                         f"block_idx shape {idx.shape} != (n_rb={n_rb}, "
+                         f"d_in_b)", {}))
+        return f
+    d_in_b = idx.shape[1]
+    if d_in_b < 1 or d_in_b > n_lb:
+        f.append(Finding("SL304", subject,
+                         f"fan-in degree {d_in_b} outside [1, n_lb={n_lb}]",
+                         {}))
+    if idx.size and (idx.min() < 0 or idx.max() >= n_lb):
+        f.append(Finding("SL304", subject,
+                         f"block_idx entries outside [0, {n_lb}): "
+                         f"min={idx.min()}, max={idx.max()}", {}))
+        return f
+
+    # SL301: duplicate edges in gather form
+    for r in range(n_rb):
+        row = idx[r]
+        if len(np.unique(row)) != len(row):
+            vals, counts = np.unique(row, return_counts=True)
+            f.append(Finding(
+                "SL301", subject,
+                f"right block {r} lists left block(s) "
+                f"{vals[counts > 1].tolist()} in multiple fan-in slots",
+                {"row": r}))
+
+    # SL302: coverage (every left block feeds something; right rows are
+    # structurally covered since block_idx is dense, but check emptiness)
+    used = np.zeros(n_lb, bool)
+    used[idx.reshape(-1)] = True
+    missing = np.flatnonzero(~used)
+    if missing.size:
+        f.append(Finding(
+            "SL302", subject,
+            f"{missing.size} left block(s) feed no right block "
+            f"(dead input blocks): {missing[:8].tolist()}...",
+            {"n_missing": int(missing.size)}))
+
+    # SL303/SL301(scatter): scatter form must be the exact transpose
+    oi = np.asarray(bp.out_idx)
+    osl = np.asarray(bp.out_slot)
+    ov = np.asarray(bp.out_valid) if bp.out_valid is not None else \
+        np.ones_like(oi)
+    if oi.shape != osl.shape or oi.shape[0] != n_lb:
+        f.append(Finding("SL303", subject,
+                         f"scatter form shapes {oi.shape}/{osl.shape} "
+                         f"inconsistent with n_lb={n_lb}", {}))
+        return f
+    gather_edges = {(int(idx[r, s]), r, s)
+                    for r in range(n_rb) for s in range(d_in_b)}
+    scatter_edges = set()
+    for lb in range(n_lb):
+        for g in range(oi.shape[1]):
+            if not ov[lb, g]:
+                continue
+            r, s = int(oi[lb, g]), int(osl[lb, g])
+            if r < 0 or r >= n_rb or s < 0 or s >= d_in_b:
+                f.append(Finding(
+                    "SL304", subject,
+                    f"scatter entry ({lb},{g}) -> (rb={r}, slot={s}) out "
+                    f"of range", {}))
+                continue
+            e = (lb, r, s)
+            if e in scatter_edges:
+                f.append(Finding(
+                    "SL301", subject,
+                    f"scatter form emits (rb={r}, slot={s}) twice from "
+                    f"left block {lb} — the tile would accumulate twice",
+                    {"edge": e}))
+            scatter_edges.add(e)
+    if scatter_edges != gather_edges and not any(
+            x.code == "SL304" for x in f):
+        only_g = sorted(gather_edges - scatter_edges)[:4]
+        only_s = sorted(scatter_edges - gather_edges)[:4]
+        f.append(Finding(
+            "SL303", subject,
+            "scatter form disagrees with gather form (FF and BP would use "
+            f"different networks); gather-only={only_g}, "
+            f"scatter-only={only_s}",
+            {"n_gather": len(gather_edges), "n_scatter": len(scatter_edges)}))
+    return f
+
+
+def check_partition(part, subject: str) -> List[Finding]:
+    """Invariants for a ``PartitionedPattern``: every shard individually
+    valid, shards disjointly cover the parent rows, and slot counts are
+    balanced across shards (SL305)."""
+    f: List[Finding] = []
+    for s, shard in enumerate(part.shards):
+        # SL302 does not apply per shard: a shard only reads the left
+        # blocks its own output rows need; coverage is a union property
+        f.extend(x for x in check_pattern(shard, f"{subject}/shard{s}")
+                 if x.code != "SL302")
+    used = np.zeros(part.parent.n_lb, bool)
+    used[np.asarray(part.idx).reshape(-1)] = True
+    if not used.all():
+        f.append(Finding(
+            "SL302", subject,
+            f"{int((~used).sum())} left block(s) feed no shard at all "
+            f"(union coverage hole): {np.flatnonzero(~used)[:8].tolist()}",
+            {}))
+    # disjoint full cover of the parent's rows
+    ra = np.asarray(part.row_assign)
+    counts = np.bincount(ra, minlength=part.n_shards)
+    if len(set(counts.tolist())) != 1:
+        f.append(Finding(
+            "SL305", subject,
+            f"row counts per shard unbalanced: {counts.tolist()} — SPMD "
+            "shards must have equal local shapes", {}))
+    perm_ok = sorted(np.asarray(part.perm).tolist()) == \
+        list(range(part.parent.n_rb))
+    if not perm_ok:
+        f.append(Finding(
+            "SL305", subject,
+            "perm is not a permutation of the parent block-rows", {}))
+    # valid-slot balance: total real work per shard must match, else some
+    # devices idle inside the padded d_loc width every step
+    ov = np.asarray(part.out_valid)
+    slot_counts = ov.reshape(part.n_shards, -1).sum(axis=1)
+    if len(set(slot_counts.tolist())) != 1:
+        f.append(Finding(
+            "SL305", subject,
+            f"valid scatter-slot counts per shard unbalanced: "
+            f"{slot_counts.tolist()} (padded width d_loc="
+            f"{ov.shape[-1]} hides idle lanes)",
+            {"slots": slot_counts.tolist()}))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Collection: find every pattern a registered config can produce by building
+# the model (pattern construction is eager and parameter-free) and walking
+# the module graph for BlockPattern attributes.
+# ---------------------------------------------------------------------------
+
+
+def collect_patterns(config_names: Optional[Sequence[str]] = None
+                     ) -> List[Tuple[str, object]]:
+    """(subject, BlockPattern) for every junction every registered config
+    instantiates (smoke variants: same structural flags, small dims)."""
+    from ..configs import ARCHS, get_config
+    from ..core.block_pattern import BlockPattern
+    from ..nn.model import build_model
+
+    out: List[Tuple[str, object]] = []
+    for name in (config_names or ARCHS):
+        model = build_model(get_config(name, smoke=True))
+        seen = set()
+        stack = [(name, model)]
+        while stack:
+            path, obj = stack.pop()
+            if id(obj) in seen:
+                continue
+            seen.add(id(obj))
+            if isinstance(obj, BlockPattern):
+                out.append((path, obj))
+                continue
+            if isinstance(obj, (list, tuple)):
+                stack.extend((f"{path}[{i}]", v) for i, v in enumerate(obj))
+            elif isinstance(obj, dict):
+                stack.extend((f"{path}.{k}", v) for k, v in obj.items()
+                             if isinstance(k, str))
+            elif type(obj).__module__.startswith("repro."):
+                d = getattr(obj, "__dict__", None)
+                if d:
+                    stack.extend((f"{path}.{k}", v) for k, v in d.items()
+                                 if not k.startswith("_"))
+    return out
+
+
+def run(config_names: Optional[Sequence[str]] = None,
+        shard_sizes: Sequence[int] = (2, 4)
+        ) -> Tuple[List[Finding], List[str]]:
+    """Run pattern invariants over every config-producible pattern plus the
+    partitions the sharding policy would build for each mesh size."""
+    from ..core.block_pattern import can_partition, partition_pattern
+
+    findings: List[Finding] = []
+    covered: List[str] = []
+    # dedupe structurally identical junctions (same dims/degree/seed) so a
+    # 24-layer stack doesn't re-check one pattern 24 times
+    by_sig = {}
+    for subject, bp in collect_patterns(config_names):
+        sig = (bp.n_in, bp.n_out, bp.block_in, bp.block_out, bp.d_in_b,
+               np.asarray(bp.block_idx).tobytes())
+        by_sig.setdefault(sig, (subject, bp))
+    for subject, bp in by_sig.values():
+        findings.extend(check_pattern(bp, subject))
+        covered.append(subject)
+        for k in shard_sizes:
+            if can_partition(bp, k):
+                findings.extend(
+                    check_partition(partition_pattern(bp, k),
+                                    f"{subject}@shards{k}"))
+                covered.append(f"{subject}@shards{k}")
+    return findings, covered

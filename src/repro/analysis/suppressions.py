@@ -1,0 +1,30 @@
+"""Checked-in suppression table for sparselint.
+
+Every entry waives one finding class on one subject and MUST carry a
+justification — the same discipline as a timing-constraint waiver in the
+FPGA flow the paper's hardware companion uses. Entries are
+``(code, subject-substring, justification)``; a finding is suppressed when
+its code matches exactly and the substring occurs in its subject. The
+finding stays in the report, marked suppressed, so waivers are visible in
+every CI artifact.
+
+Add entries here (with a comment) rather than passing ``--no-suppress``
+exceptions around; the lint CI gate reads exactly this table.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .findings import Suppression
+
+SUPPRESSIONS: List[Suppression] = [
+    # The decode kernel walks the page pool through a page table whose
+    # unused entries are -1, clamped to page 0 in the index map; grid rows
+    # past a sequence's length therefore re-read page 0 and their output
+    # contribution is masked by the in-kernel length predicate. The grid
+    # pass sees the clamped revisits of kv page 0 as non-monotone input
+    # streaming, which is real (and intentional: the pool has no "null
+    # page") but touches only *inputs*; outputs are visited once.
+    # -> nothing currently fires for this; kept as the worked example of
+    #    the format. Remove when a first real waiver lands.
+]

@@ -24,11 +24,30 @@ SRAM-port clash).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 import numpy as np
 
 from . import sparsity
+
+
+def _debug_on(debug: Optional[bool]) -> bool:
+    """Resolve a three-state debug flag: explicit argument wins, else the
+    ``REPRO_PATTERN_DEBUG`` env var enables checking globally."""
+    if debug is not None:
+        return debug
+    return bool(os.environ.get("REPRO_PATTERN_DEBUG"))
+
+
+def _check_or_raise(check, obj, subject: str) -> None:
+    findings = check(obj, subject)
+    if findings:
+        lines = "\n".join(f"  {f.code} {f.subject}: {f.message}"
+                          for f in findings)
+        raise ValueError(
+            f"pattern invariant violation ({len(findings)} finding(s)):\n"
+            f"{lines}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,14 +227,17 @@ def _local_scatter(block_idx_local: np.ndarray, n_lb: int, d_loc: int):
     return oidx, oslot, ovalid
 
 
-def partition_pattern(pattern: BlockPattern,
-                      axis_size: int) -> PartitionedPattern:
+def partition_pattern(pattern: BlockPattern, axis_size: int,
+                      debug: Optional[bool] = None) -> PartitionedPattern:
     """Split ``pattern`` into ``axis_size`` shard-local patterns over
     disjoint output block-row ranges, load-balanced by slot count.
 
     Requires ``n_rb % axis_size == 0`` (every shard must run the same SPMD
     program, so local shapes must match). Raises ``ValueError`` otherwise —
     callers use :func:`can_partition` to gate the sharded path.
+
+    ``debug=True`` (or ``REPRO_PATTERN_DEBUG=1``) runs the sparselint
+    SL3xx invariant checks on the result and raises on any finding.
     """
     n_rb = pattern.n_rb
     if axis_size < 1:
@@ -257,12 +279,16 @@ def partition_pattern(pattern: BlockPattern,
             meta=dict(pattern.meta, shard=s, of=axis_size,
                       rows=shard_rows[s].tolist()),
         ))
-    return PartitionedPattern(
+    part = PartitionedPattern(
         parent=pattern, n_shards=axis_size, shards=tuple(shards),
         row_assign=row_assign, perm=perm, inv_perm=inv_perm,
         idx=idx_stk.astype(np.int32),
         out_idx=np.stack(oidx_l), out_slot=np.stack(oslot_l),
         out_valid=np.stack(ovalid_l))
+    if _debug_on(debug):
+        from ..analysis.pattern_pass import check_partition
+        _check_or_raise(check_partition, part, "partition_pattern")
+    return part
 
 
 def can_partition(pattern: Optional[BlockPattern], axis_size: int) -> bool:
@@ -343,7 +369,9 @@ def shrink_to_divisor(dim: int, block: int) -> int:
 
 
 def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
-                      seed: int = 0) -> Optional[BlockPattern]:
+                      seed: int = 0,
+                      debug: Optional[bool] = None
+                      ) -> Optional[BlockPattern]:
     """Adapt a ``SparsityConfig``'s block sizes to one junction, or return
     ``None`` if the junction should stay dense.
 
@@ -366,6 +394,13 @@ def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
     min_b = min(32, sp.block_in, sp.block_out)
     if bi < min_b or bo < min_b:
         return None
-    return make_block_pattern(
+    bp = make_block_pattern(
         n_in, n_out, rho, block_in=bi, block_out=bo, method=sp.method,
         seed=sp.seed + seed, cf_type=sp.cf_type, dither=sp.dither)
+    # ``debug=True`` (or REPRO_PATTERN_DEBUG=1): certify the generated
+    # pattern with the sparselint SL3xx checks before it reaches a kernel
+    if _debug_on(debug):
+        from ..analysis.pattern_pass import check_pattern
+        _check_or_raise(check_pattern, bp,
+                        f"fit_block_pattern({n_in}x{n_out}, rho={rho})")
+    return bp

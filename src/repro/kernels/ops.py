@@ -556,6 +556,12 @@ def _spmd_bwd_vjp(spat, has_bias, activation, backend, block_m, interpret,
     x_spec, w_spec, b_spec, y_spec = _shard_specs(
         batched, has_bias, lead, axis)
     bl_, br_ = spat.block_in, spat.block_out
+    # mesh axes the batch (lead) dims are mapped over: dw/db sum over the
+    # batch, so their shard-local partials must all-reduce over these axes
+    # (dw's out-spec is unmapped over them — sparselint SL205)
+    lead_axes = tuple(
+        a for entry in lead if entry is not None
+        for a in (entry if isinstance(entry, tuple) else (entry,)))
 
     def local(xl, wl, bll, auxl, dyl):
         idx, oidx, oslot, ovalid = _local_pattern(spat, axis)
@@ -593,6 +599,9 @@ def _spmd_bwd_vjp(spat, has_bias, activation, backend, block_m, interpret,
         # BP assembles the full input cotangent: every shard's output rows
         # pull on the whole input, so the partials all-reduce over `axis`
         dx = jax.lax.psum(dxl, axis)
+        if lead_axes:
+            dwl = jax.lax.psum(dwl, lead_axes)
+            dbl = jax.lax.psum(dbl, lead_axes)
         return dx, dwl, dbl
 
     dx_spec = P(*lead, None)

@@ -327,8 +327,10 @@ def test_sharded_train_step_loss_parity_and_slab_chunking():
                              for sh in shard_shapes))
     """, devices=8)
     # one Adam step at lr=1e-3 moves params by ~lr; reduction-order noise
-    # flips low bits of the update, so the budget is a few ulps of lr
-    assert float(out.split("MAXERR")[1].split()[0]) < 5e-3, out
+    # flips low bits of the update, so the budget is a few ulps of lr.
+    # Keep this tight: a missing dw/db psum over the data axis (sparselint
+    # SL205) produces ~lr-scale divergence that 5e-3 would let through
+    assert float(out.split("MAXERR")[1].split()[0]) < 5e-4, out
     assert float(out.split("LOSSDIFF")[1].split()[0]) < 1e-4, out
     assert "CHUNKED True" in out, out
 
