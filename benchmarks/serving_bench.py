@@ -11,6 +11,12 @@ Three generation strategies over the same smoke-scale model and prompts:
 * **engine**    — ``ServingEngine``: paged KV cache, chunked prefill
   interleaved with batched decode, one token per running request per step.
 
+A fourth section benchmarks **speculative decode** (prompt-lookup drafts,
+``spec_k=4``) against the plain engine on a repetitive-prompt workload,
+reporting draft acceptance rate and the tokens/sec multiplier — the
+acceptance bar there is a throughput win (> 1x) plus the engine's >= 2x
+over recompute.
+
 Reported per density (the paper's junction-density sweep applied to the
 serving stack): tokens/sec, time-to-first-token, and the engine's speedup
 over recompute — the acceptance bar is >= 2x at batch >= 4 on CPU/XLA.
@@ -94,14 +100,26 @@ def make_cached(model, params, s_max: int):
 
 
 def make_engine(model, params, batch: int, max_len: int, page_size: int,
-                token_budget: int) -> ServingEngine:
+                token_budget: int, spec_k: int = 0) -> ServingEngine:
     pages_per_seq = -(-max_len // page_size)
     return ServingEngine(
         model, params,
         EngineConfig(max_slots=min(batch, 8), page_size=page_size,
                      total_pages=batch * pages_per_seq,
                      max_pages_per_seq=pages_per_seq,
-                     token_budget=token_budget, prefill_chunk=32))
+                     token_budget=token_budget, prefill_chunk=32,
+                     spec_k=spec_k))
+
+
+def spec_workload(rng, vocab: int, batch: int, prompt_len: int):
+    """Maximally repetitive prompts — each a single token repeated — the
+    drafter's target regime (code, templated docs and long generations
+    stuck in an attractor all repeat their own n-grams; a constant prompt
+    is the distilled version that also drives the smoke model into a
+    repeating continuation, so draft acceptance is exercised rather than
+    left to the luck of a random-weight trajectory)."""
+    return [np.full(prompt_len, t, np.int32)
+            for t in rng.integers(0, vocab, batch)]
 
 
 def engine_generate(eng: ServingEngine, prompts, steps: int):
@@ -179,6 +197,64 @@ def run(arch: str = "qwen2-7b", batch: int = 4, prompt_len: int = 32,
                "speedup_vs_recompute": round(speedup, 2),
                "stats": stats}
         results["rows"].append(row)
+
+        if tag == "default":
+            # speculative decode: repetitive-prompt workload in a
+            # decode-dominated regime (generation length >= 48 even under
+            # --quick: with short generations prefill amortisation hides
+            # what speculation changes), spec_k=4 drafter vs a plain
+            # engine with identical shapes and budget
+            sp_gen, sp_prompt = max(steps, 48), 16
+            sp = spec_workload(rng, cfg.vocab_size, batch, sp_prompt)
+            ebase = make_engine(model, params, batch, sp_prompt + sp_gen,
+                                page_size,
+                                token_budget=batch + sp_prompt)
+            engk = make_engine(model, params, batch, sp_prompt + sp_gen,
+                               page_size, token_budget=batch + sp_prompt,
+                               spec_k=4)
+            # full-length warmups: a short warmup misses the rollback
+            # (truncate) code path and its compiles land in the timed run.
+            # Timed runs are best-of-3 — the workload is deterministic
+            # (identical tokens and step counts every rep), so the spread
+            # is pure host noise and max is the honest estimator.
+            engine_generate(ebase, sp, sp_gen)
+            s0 = dict(ebase.sched.stats)       # stats are cumulative
+            base_tps = 0.0
+            for _ in range(3):
+                _, tps_i, _, bst = engine_generate(ebase, sp, sp_gen)
+                base_tps = max(base_tps, tps_i)
+            if engk.spec_k > 0:
+                engine_generate(engk, sp, sp_gen)
+                k0 = dict(engk.sched.stats)
+                spec_tps = 0.0
+                for _ in range(3):
+                    _, tps_i, _, st = engine_generate(engk, sp, sp_gen)
+                    spec_tps = max(spec_tps, tps_i)
+                reps = 3
+                drafted = (st["spec_drafted"] - k0["spec_drafted"]) // reps
+                accepted = (st["spec_accepted"]
+                            - k0["spec_accepted"]) // reps
+                acc = accepted / max(drafted, 1)
+                results["spec"] = {
+                    "spec_k": engk.spec_k,
+                    "acceptance_rate": round(acc, 3),
+                    "drafted": drafted,
+                    "accepted": accepted,
+                    "base_tps": round(base_tps, 1),
+                    "spec_tps": round(spec_tps, 1),
+                    "speedup_vs_base": round(
+                        spec_tps / max(base_tps, 1e-9), 2),
+                    "steps_base": (bst["steps"] - s0["steps"]) // reps,
+                    "steps_spec": (st["steps"] - k0["steps"]) // reps}
+                emit(f"serving/{arch}_spec_acceptance", 0.0,
+                     round(acc, 3))
+                emit(f"serving/{arch}_spec_tps", 0.0, round(spec_tps, 1))
+                emit(f"serving/{arch}_spec_speedup", 0.0,
+                     f"{spec_tps / max(base_tps, 1e-9):.2f}x")
+            else:
+                # recurrent stack: the engine clamps spec_k to 0
+                results["spec"] = {"spec_k": 0, "clamped": True}
+
         emit(f"serving/{arch}_{tag}_recompute_tps", 0.0, round(r_tps, 1))
         emit(f"serving/{arch}_{tag}_cached_tps", 0.0, round(c_tps, 1))
         emit(f"serving/{arch}_{tag}_engine_tps", 0.0, round(e_tps, 1))
@@ -211,6 +287,16 @@ def main():
     ok = res["rows"][0]["speedup_vs_recompute"] >= 2.0
     print(f"engine >= 2x recompute at batch={res['batch']} "
           f"(default density): {'PASS' if ok else 'FAIL'}")
+    sp = res.get("spec", {})
+    if sp.get("spec_k"):
+        spec_ok = sp["speedup_vs_base"] > 1.0
+        print(f"spec decode (k={sp['spec_k']}): acceptance "
+              f"{sp['acceptance_rate']:.1%}, {sp['spec_tps']} tok/s vs "
+              f"{sp['base_tps']} base "
+              f"({sp['speedup_vs_base']:.2f}x, steps "
+              f"{sp['steps_spec']} vs {sp['steps_base']}): "
+              f"{'PASS' if spec_ok else 'FAIL'}")
+        ok = ok and spec_ok
     if not ok:
         raise SystemExit(1)
 

@@ -318,6 +318,58 @@ def _trace_paged(name: str, mesh) -> Optional[Tuple[Any, Any, str]]:
     return traced, args, f"paged_step[{name}]"
 
 
+def _trace_verify(name: str, mesh) -> Optional[Tuple[Any, Any, str]]:
+    """Trace the engine's speculative verify step: ``paged_step`` over a
+    ``1 + spec_k`` token chunk with ``all_logits=True`` (greedy
+    acceptance needs per-position logits, not just the last row). This
+    is a distinct executable from the C==1 decode step — different token
+    width, different attention path (chunk instead of paged-decode
+    kernel) — so it is linted as its own subject. None for configs the
+    engine never speculates on: recurrent (mamba) state cannot be rolled
+    back, so ``spec_k`` is clamped to 0 there."""
+    import jax
+
+    from ..configs import get_config
+    from ..nn.common import dtype_of, mesh_context
+    from ..nn.model import build_model
+    from ..sharding import policy
+
+    cfg = get_config(name, smoke=True)
+    if cfg.input_mode != "tokens" or cfg.enc_dec is not None:
+        return None
+    if "mamba" in cfg.layer_kinds:
+        return None
+    model = build_model(cfg)
+    slots, pages, page_size, max_pages = 2, 8, 16, 4
+    spec_k = 4
+    cache_avals = jax.eval_shape(
+        lambda: model.stack.init_paged_cache(slots, pages, page_size,
+                                             dtype_of(cfg)))
+    p_avals = jax.eval_shape(model.init, jax.random.key(0))
+    i32 = np.int32
+
+    def raw_verify(params, cache, page_table, tokens, pos, n_new,
+                   slot_ids):
+        return model.paged_step(params, tokens, pos, n_new, cache,
+                                page_table, slot_ids, backend="auto",
+                                interpret=True, all_logits=True)
+
+    step = jax.jit(raw_verify, donate_argnums=(1,))
+    args = (p_avals, cache_avals,
+            jax.ShapeDtypeStruct((slots, max_pages), i32),
+            jax.ShapeDtypeStruct((slots, 1 + spec_k), i32),
+            jax.ShapeDtypeStruct((slots,), i32),
+            jax.ShapeDtypeStruct((slots,), i32),
+            jax.ShapeDtypeStruct((slots,), i32))
+    if mesh is not None:
+        rules = policy.rules_for("decode", slots, mesh, cfg)
+        with mesh, mesh_context(mesh, rules):
+            traced = step.trace(*args)
+    else:
+        traced = step.trace(*args)
+    return traced, args, f"spec_verify[{name}]"
+
+
 def run(config_names: Optional[Sequence[str]] = None,
         mesh_shape: Tuple[int, int] = (2, 4),
         const_threshold: int = DEFAULT_CONST_THRESHOLD,
@@ -348,7 +400,7 @@ def run(config_names: Optional[Sequence[str]] = None,
     findings: List[Finding] = []
     covered: List[str] = []
     for name in (config_names or ARCHS):
-        for tracer in (_trace_train, _trace_paged):
+        for tracer in (_trace_train, _trace_paged, _trace_verify):
             try:
                 res = tracer(name, mesh)
             except Exception as e:

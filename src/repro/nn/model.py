@@ -599,11 +599,16 @@ class LM:
     def paged_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
                    n_new: jax.Array, cache: dict, page_table: jax.Array,
                    slot_ids: jax.Array, *, backend: str = "auto",
-                   interpret: bool = False) -> Tuple[jax.Array, dict]:
+                   interpret: bool = False, all_logits: bool = False
+                   ) -> Tuple[jax.Array, dict]:
         """One engine step: tokens (B, C) int32, per-row start positions
         ``pos`` (B,) and valid counts ``n_new`` (B,). C == 1 is a batched
-        decode step; C > 1 one prefill chunk (usually B == 1). Returns
-        (last-valid-token logits (B, 1, V), updated paged cache).
+        decode step; C > 1 one prefill chunk or a speculative verify
+        chunk (pending token + drafts). Returns (last-valid-token logits
+        (B, 1, V), updated paged cache) — or, with ``all_logits=True``
+        (static), logits at EVERY chunk position (B, C, V): the verify
+        path needs the greedy continuation after each draft to accept the
+        longest matching prefix host-side.
 
         Only token-input decoder-only models serve through this path;
         frontends (embeddings) and enc-dec go through the legacy loop.
@@ -622,6 +627,8 @@ class LM:
             params["stack"], x, pos, n_new, cache, page_table, slot_ids,
             emb=emb, backend=backend, interpret=interpret)
         x = self.ln_f(params["ln_f"], x)
+        if all_logits:
+            return self.logits_fn(params, x), new_cache
         idx = jnp.clip(n_new - 1, 0, x.shape[1] - 1)
         h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = self.logits_fn(params, h_last)

@@ -5,20 +5,24 @@
 * ``scheduler`` — admit/evict/preempt + chunked-prefill planning under a
                   per-step token budget (the paper's flexible-``z`` time
                   multiplexing applied to requests).
+* ``spec``      — model-free prompt-lookup drafter for speculative
+                  multi-token decode (greedy-verified by the engine).
 * ``engine``    — ``ServingEngine``: prefill through the flash-attention
                   + csd_matmul path, decode through the paged-attention
                   kernel (Pallas on TPU, gather-XLA elsewhere).
 
-``engine`` is imported lazily: ``kv_cache``/``scheduler`` are dependency
--light (the model stack imports them), while the engine pulls in the full
-``repro.nn`` stack.
+``engine`` is imported lazily: ``kv_cache``/``scheduler``/``spec`` are
+dependency-light (the model stack imports them), while the engine pulls
+in the full ``repro.nn`` stack.
 """
-from . import kv_cache, scheduler  # noqa: F401
+from . import kv_cache, scheduler, spec  # noqa: F401
 from .kv_cache import PageState, init_page_state  # noqa: F401
 from .scheduler import Request, Scheduler, StepPlan  # noqa: F401
+from .spec import PromptLookupDrafter, propose_drafts  # noqa: F401
 
-__all__ = ["kv_cache", "scheduler", "engine", "PageState",
+__all__ = ["kv_cache", "scheduler", "spec", "engine", "PageState",
            "init_page_state", "Request", "Scheduler", "StepPlan",
+           "PromptLookupDrafter", "propose_drafts",
            "ServingEngine", "EngineConfig"]
 
 

@@ -3,17 +3,33 @@
 One ``step()`` executes a scheduler plan: chunked prefill for sequences
 still consuming their prompt (through the same fused csd_matmul junctions
 as training; attention over previously-cached pages by gather) interleaved
-with one batched decode token for every running sequence (through the
+with batched decode for every running sequence (through the
 paged-attention kernel — Pallas on TPU, gather-XLA elsewhere). Fixed
 accelerator memory (the page pool) serves any number / length of requests
 by time-multiplexing the per-step token budget — the serving analog of the
 paper's flexible-``z`` junction hardware.
 
+Two throughput multipliers keep that budget (the ``z`` lanes) busy when
+decode dominates:
+
+* **speculative decode** (``spec_k > 0``): a model-free prompt-lookup
+  drafter proposes up to ``k`` continuation tokens per slot; the engine
+  verifies pending + drafts in ONE multi-token ``paged_step`` (the chunk
+  path prefill already uses) and accepts the longest greedily-matching
+  prefix, rolling rejected KV back via ``kv_cache.truncate``. Greedy
+  acceptance keeps the output token-identical to plain decode.
+* **batched prefill**: the scheduler packs equal-length power-of-two
+  chunks from different sequences into one B>1 call, collapsing
+  O(slots) sequential chunk launches into O(log prefill_chunk) batched
+  ones.
+
 The jitted step function has one signature for both phases; distinct chunk
 lengths trace separate executables (the scheduler emits power-of-two
-chunks, so there are O(log prefill_chunk) of them). Prompt chunks are
-exact — never padded — so SSM recurrent state advances over real tokens
-only and stays bit-identical to a full-sequence prefill.
+chunks, so there are O(log prefill_chunk) of them, plus at most one
+verify shape at ``1 + spec_k``). Prompt chunks are exact — rows are
+either fully valid or fully inactive, never partially padded — so SSM
+recurrent state advances over real tokens only and stays bit-identical
+to a full-sequence prefill.
 
 Sharded decode (``mesh=...``): the engine jits ``LM.paged_step`` once
 under the SERVE mesh rules — params placed by ``policy.param_pspecs``
@@ -38,6 +54,7 @@ import numpy as np
 
 from ..nn.common import dtype_of, mesh_context
 from .scheduler import Request, Scheduler, StepPlan
+from .spec import PromptLookupDrafter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +72,13 @@ class EngineConfig:
     interpret: bool = False     # Pallas interpret mode (CPU tests)
     greedy: bool = True
     temperature: float = 1.0
+    # speculative decode: up to spec_k prompt-lookup draft tokens per
+    # decode slot, verified in one multi-token step (0 = off). Greedy
+    # only, and auto-disabled for stacks with recurrent (mamba) layers:
+    # KV pages can be truncated after a rejected draft, a recurrence
+    # that already stepped over it cannot.
+    spec_k: int = 0
+    spec_ngram: int = 3         # longest suffix n-gram the drafter matches
 
 
 class ServingEngine:
@@ -93,13 +117,21 @@ class ServingEngine:
         self.params = params
         self.config = cfg
         self.key = key if key is not None else jax.random.key(0)
+        # speculative decode is greedy-only (acceptance compares argmax
+        # continuations) and needs rollback: paged KV truncates, mamba
+        # recurrent state does not — clamp k to 0 for recurrent stacks
+        self.spec_k = cfg.spec_k if cfg.greedy \
+            and "mamba" not in mc.layer_kinds else 0
+        drafter = PromptLookupDrafter(cfg.spec_ngram) if self.spec_k \
+            else None
         self.sched = Scheduler(
             slots=cfg.max_slots, total_pages=cfg.total_pages,
             page_size=cfg.page_size,
             max_pages_per_seq=cfg.max_pages_per_seq,
             token_budget=cfg.token_budget,
             prefill_chunk=cfg.prefill_chunk,
-            window=self._reclaim_window(mc))
+            window=self._reclaim_window(mc),
+            spec_k=self.spec_k, drafter=drafter)
         self.cache = model.stack.init_paged_cache(
             cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc))
         self._next_id = 0
@@ -127,17 +159,29 @@ class ServingEngine:
                 params, tokens, pos, n_new, cache, page_table, slot_ids,
                 backend=cfg.backend, interpret=cfg.interpret)
 
+        def raw_verify(params, cache, page_table, tokens, pos, n_new,
+                       slot_ids):
+            # speculative verify: logits at EVERY chunk position, so the
+            # host can accept the longest greedily-matching draft prefix
+            return model.paged_step(
+                params, tokens, pos, n_new, cache, page_table, slot_ids,
+                backend=cfg.backend, interpret=cfg.interpret,
+                all_logits=True)
+
         if mesh is not None:
             # one executable per phase under the SERVE mesh: params and the
             # paged pools keep their placement across steps, logits come
             # back replicated for host-side sampling
-            self._step = jax.jit(
-                raw_step, donate_argnums=(1,),
+            jit_kw = dict(
+                donate_argnums=(1,),
                 in_shardings=(self._param_sh, self._cache_sh, None, None,
                               None, None, None),
                 out_shardings=(None, self._cache_sh))
+            self._step = jax.jit(raw_step, **jit_kw)
+            self._verify = jax.jit(raw_verify, **jit_kw)
         else:
             self._step = jax.jit(raw_step, donate_argnums=(1,))
+            self._verify = jax.jit(raw_verify, donate_argnums=(1,))
 
     @staticmethod
     def _reclaim_window(mc) -> Optional[int]:
@@ -174,6 +218,13 @@ class ServingEngine:
                 f"page_size)")
         if req_id is None:
             req_id = self._next_id
+        elif any(r.req_id == req_id for r in self.sched.waiting) or any(
+                s is not None and s.req.req_id == req_id
+                for s in self.sched.active):
+            # a duplicate would silently cross-wire outputs/ttft/_t_added
+            # between the two requests (dict keys collide)
+            raise ValueError(
+                f"req_id {req_id} is already queued or in flight")
         self._next_id = max(self._next_id, req_id) + 1
         self.sched.add(Request(req_id=req_id, prompt=prompt,
                                max_new_tokens=max_new_tokens))
@@ -218,25 +269,40 @@ class ServingEngine:
             self.cache = self.model.stack.reset_slot_state(self.cache,
                                                            slot)
 
-        for slot, start, toks in plan.prefills:
-            pt = self.sched.state.page_table[slot][None]
+        slots = cfg.max_slots
+        for group in plan.prefill_groups:
+            # equal-length chunks from different sequences packed into
+            # ONE batched call (rows are slot-indexed; slots without a
+            # chunk this step ride along inactive with n_new == 0, so
+            # there are O(log prefill_chunk) compiled shapes, not
+            # O(slots) sequential launches)
+            c = len(group[0][2])
+            tokens = np.zeros((slots, c), np.int32)
+            pos = np.zeros((slots,), np.int32)
+            n_new = np.zeros((slots,), np.int32)
+            for slot, start, toks in group:
+                tokens[slot, :len(toks)] = toks
+                pos[slot] = start
+                n_new[slot] = len(toks)
             logits, self.cache = self._step(
-                self.params, self.cache, pt,
-                jnp.asarray(toks[None]),
-                jnp.asarray([start], jnp.int32),
-                jnp.asarray([len(toks)], jnp.int32),
-                jnp.asarray([slot], jnp.int32))
-            self.sched.advance_prefill(slot, len(toks))
-            seq = self.sched.active[slot]
-            if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
-                # prompt fully cached and no pending token yet (also true
-                # right after a preemption recompute): sample the next one
-                self.sched.append_token(slot, self._sample(logits[0, 0],
-                                                           slot))
-                self._emit(slot)
+                self.params, self.cache, self.sched.state.page_table,
+                jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+            for slot, start, toks in group:
+                self.sched.advance_prefill(slot, len(toks))
+                seq = self.sched.active[slot]
+                if not seq.prefilling \
+                        and len(seq.tokens) == seq.n_prefilled:
+                    # prompt fully cached and no pending token yet (also
+                    # true right after a preemption recompute): sample it
+                    self.sched.append_token(
+                        slot, self._sample(logits[slot, 0], slot))
+                    self._emit(slot)
 
-        if plan.decode_slots:
-            slots = cfg.max_slots
+        kmax = max((len(plan.drafts.get(s, ()))
+                    for s in plan.decode_slots), default=0)
+        if plan.decode_slots and kmax == 0:
+            # plain decode (C == 1): the PR-3 baseline path, bit-for-bit
             tokens = np.zeros((slots, 1), np.int32)
             n_new = np.zeros((slots,), np.int32)
             for s in plan.decode_slots:
@@ -255,6 +321,8 @@ class ServingEngine:
                     else self._sample(logits[s, 0], s)
                 self.sched.append_token(s, tok)
                 self._emit(s)
+        elif plan.decode_slots:
+            self._verify_decode(plan)
 
         finished = []
         for s in range(cfg.max_slots):
@@ -265,6 +333,45 @@ class ServingEngine:
                 self._t_added.pop(req.req_id, None)
                 finished.append((req.req_id, gen))
         return plan, finished
+
+    def _verify_decode(self, plan: StepPlan) -> None:
+        """Speculative decode: verify pending + draft tokens for every
+        decode slot in ONE multi-token ``paged_step`` (``n_new`` = 1 +
+        drafts per row, chunk padded to ``1 + spec_k`` so exactly one
+        extra executable is ever compiled). Greedy verification accepts
+        the longest prefix of drafts matching the model's own argmax
+        continuations — so accepted tokens are exactly what plain decode
+        would have produced — and rejected tail KV rolls back through
+        ``kv_cache.truncate``."""
+        slots = self.config.max_slots
+        c = 1 + self.spec_k
+        tokens = np.zeros((slots, c), np.int32)
+        n_new = np.zeros((slots,), np.int32)
+        for s in plan.decode_slots:
+            row = [self.sched.active[s].pending_token] \
+                + plan.drafts.get(s, [])
+            tokens[s, :len(row)] = row
+            n_new[s] = len(row)
+        logits, self.cache = self._verify(
+            self.params, self.cache, self.sched.state.page_table,
+            jnp.asarray(tokens), self.sched.state.seq_lens,
+            jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))    # (slots, C)
+        for s in plan.decode_slots:
+            drafts = plan.drafts.get(s, [])
+            g = greedy[s]
+            m = 0
+            while m < len(drafts) and drafts[m] == int(g[m]):
+                m += 1
+            # committed: the pending token + m accepted drafts; emitted:
+            # their greedy continuations g[0..m] (g[m] is the bonus token
+            # from the last accepted position — it becomes the new
+            # pending token, exactly as in plain decode)
+            self.sched.note_verified(s, n_written=1 + len(drafts),
+                                     n_accepted=1 + m)
+            for i in range(m + 1):
+                self.sched.append_token(s, int(g[i]))
+                self._emit(s)
 
     # -- drain loop --------------------------------------------------------
 
@@ -283,7 +390,11 @@ class ServingEngine:
             steps += 1
             if steps > max_steps:
                 raise RuntimeError("engine failed to drain (stuck plan?)")
-            if plan.n_tokens == 0 and not plan.admitted:
+            if plan.n_tokens == 0 and not plan.admitted \
+                    and not plan.preempted:
+                # a preempt-only plan is NOT stuck: preemption just freed
+                # pages (after the allocations that triggered it failed),
+                # so the next step can admit/prefill into them
                 raise RuntimeError(
                     "scheduler produced an empty plan with work pending — "
                     "page pool too small for any resident sequence")

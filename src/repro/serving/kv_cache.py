@@ -154,6 +154,43 @@ def release_prefix(st: PageState, slot, n: int) -> PageState:
         first_page=st.first_page.at[slot].add(n))
 
 
+def truncate(st: PageState, slot, n_tokens: int,
+             page_size: int) -> PageState:
+    """Speculative-decode rollback — the mirror of ``release_prefix``:
+    un-record the last ``n_tokens`` tokens of ``slot`` (rejected draft KV)
+    and return tail pages that now hold no live token to the free list.
+    ``n_tokens`` is a static (host-side) count; the page-release count is
+    data-dependent (it depends on where the new length falls within a
+    page) and is computed with the same masked-scatter idiom as
+    ``free_slot``, so the whole op stays jit-traceable. The caller must
+    guarantee ``n_tokens <= seq_lens[slot]`` and that the truncated length
+    does not fall below ``first_page * page_size`` (window-reclaimed
+    positions are dead forever and cannot be rolled back into)."""
+    if n_tokens == 0:
+        return st
+    m = st.max_pages_per_seq
+    row = st.page_table[slot]
+    first = st.first_page[slot]
+    end = first + st.n_pages[slot]
+    new_len = st.seq_lens[slot] - n_tokens
+    # first logical page to free: everything at or beyond the page that
+    # holds the (new) write head stays; clip keeps the op total even if
+    # the caller's precondition is violated
+    keep = jnp.clip((new_len + page_size - 1) // page_size, first, end)
+    lg = jnp.arange(m)
+    dead = (lg >= keep) & (lg < end)
+    dst = jnp.where(dead, st.free_count + lg - keep, st.total_pages)
+    stack = st.free_stack.at[dst].set(jnp.where(dead, row, 0),
+                                      mode="drop")
+    return dataclasses.replace(
+        st,
+        page_table=st.page_table.at[slot].set(jnp.where(dead, -1, row)),
+        n_pages=st.n_pages.at[slot].set(keep - first),
+        seq_lens=st.seq_lens.at[slot].add(-n_tokens),
+        free_stack=stack,
+        free_count=st.free_count + (end - keep))
+
+
 def advance(st: PageState, slot, n_tokens: int) -> PageState:
     """Record ``n_tokens`` more tokens written for ``slot``."""
     return dataclasses.replace(
@@ -162,6 +199,19 @@ def advance(st: PageState, slot, n_tokens: int) -> PageState:
 
 def pages_needed(seq_len: int, page_size: int) -> int:
     return -(-seq_len // page_size)
+
+
+# Jitted fast paths for the scheduler's per-step host loop. Called
+# eagerly, the ops above dispatch one scatter at a time — at smoke scale
+# that costs more than the engine's entire jitted model step (``truncate``
+# runs ~15 eager ops per rollback). ``slot`` stays dynamic (one executable
+# across slots); the count arguments are static where a host ``if`` guards
+# them, and their value sets are tiny (draft depths, window shifts), so
+# this lands a handful of executables at most.
+advance_fast = jax.jit(advance)
+truncate_fast = jax.jit(truncate,
+                        static_argnames=("n_tokens", "page_size"))
+release_prefix_fast = jax.jit(release_prefix, static_argnames=("n",))
 
 
 # ---------------------------------------------------------------------------

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -97,11 +97,31 @@ class StepPlan:
     prefills: List[Tuple[int, int, np.ndarray]]
     admitted: List[int] = dataclasses.field(default_factory=list)
     preempted: List[int] = dataclasses.field(default_factory=list)
+    # speculative draft tokens per decode slot (absent key = no drafts):
+    # the engine verifies pending + drafts in one multi-token step
+    drafts: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
 
     @property
     def n_tokens(self) -> int:
-        return len(self.decode_slots) + sum(len(c) for _, _, c in
-                                            self.prefills)
+        """Tokens of work this plan issues (draft/verify tokens count:
+        each draft occupies one lane of the per-step budget exactly like
+        a decode or prefill token)."""
+        return (len(self.decode_slots)
+                + sum(len(d) for d in self.drafts.values())
+                + sum(len(c) for _, _, c in self.prefills))
+
+    @property
+    def prefill_groups(self) -> List[List[Tuple[int, int, np.ndarray]]]:
+        """Prefill work packed for batched execution: chunks of EQUAL
+        length from different sequences form one group, executed as one
+        B>1 ``paged_step`` call (equal length keeps the batched call
+        rectangular with every row fully valid — required for SSM layers,
+        whose full-scan path cannot mask a partial row). Chunk lengths
+        are powers of two, so there are O(log prefill_chunk) groups."""
+        groups: Dict[int, List[Tuple[int, int, np.ndarray]]] = {}
+        for item in self.prefills:
+            groups.setdefault(len(item[2]), []).append(item)
+        return [groups[c] for c in sorted(groups)]
 
 
 def _pow2_chunk(n: int, cap: int) -> int:
@@ -115,14 +135,24 @@ class Scheduler:
 
     def __init__(self, *, slots: int, total_pages: int, page_size: int,
                  max_pages_per_seq: int, token_budget: int,
-                 prefill_chunk: int, window: Optional[int] = None):
+                 prefill_chunk: int, window: Optional[int] = None,
+                 spec_k: int = 0,
+                 drafter: Optional[Callable[[Sequence[int], int],
+                                            List[int]]] = None):
         if prefill_chunk < 1 or token_budget < 1:
             raise ValueError("prefill_chunk and token_budget must be >= 1")
         if window is not None and window < 1:
             raise ValueError("window must be >= 1 (or None)")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
         self.page_size = page_size
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
+        # speculative decode: up to spec_k draft tokens per decode slot,
+        # proposed by ``drafter(tokens, k)`` (model-free prompt lookup),
+        # verified by the engine in one multi-token step
+        self.spec_k = spec_k
+        self.drafter = drafter
         # sliding-window page reclamation: when every attention layer's
         # window is <= ``window``, pages whose tokens have all fallen out
         # of the window are freed eagerly after each advance — fixed-pool
@@ -137,7 +167,8 @@ class Scheduler:
         self.active: List[Optional[ActiveSeq]] = [None] * slots
         self._admit_counter = 0
         self.stats = {"admitted": 0, "preempted": 0, "finished": 0,
-                      "steps": 0, "reclaimed_pages": 0}
+                      "steps": 0, "reclaimed_pages": 0,
+                      "spec_drafted": 0, "spec_accepted": 0}
         # host-side mirrors of the PageState counters: every read on the
         # per-token scheduling path uses these (a device sync per read
         # would put O(slots) round-trips on the decode hot path); the jnp
@@ -160,7 +191,7 @@ class Scheduler:
     def advance_prefill(self, slot: int, n: int) -> None:
         seq = self.active[slot]
         seq.n_prefilled += n
-        self.state = kv_cache.advance(self.state, slot, n)
+        self.state = kv_cache.advance_fast(self.state, slot, n)
         self._seq_lens[slot] += n
         self._reclaim(slot)
 
@@ -173,8 +204,37 @@ class Scheduler:
         ``n_prefilled``."""
         seq = self.active[slot]
         seq.n_prefilled += 1
-        self.state = kv_cache.advance(self.state, slot, 1)
+        self.state = kv_cache.advance_fast(self.state, slot, 1)
         self._seq_lens[slot] += 1
+        self._reclaim(slot)
+
+    def note_verified(self, slot: int, n_written: int,
+                      n_accepted: int) -> None:
+        """A speculative verify step wrote ``n_written`` tokens of KV
+        (pending + drafts) starting at ``n_prefilled``, of which the first
+        ``n_accepted`` were committed by greedy verification. Rejected
+        tail KV is rolled back via ``kv_cache.truncate`` and its
+        now-empty tail pages return to the pool. Window reclamation runs
+        only AFTER the rollback: reclaiming against the transiently
+        inflated length could free pages that the rollback then brings
+        back inside the window."""
+        assert 1 <= n_accepted <= n_written
+        seq = self.active[slot]
+        seq.n_prefilled += n_accepted
+        self.state = kv_cache.advance_fast(self.state, slot, n_written)
+        rejected = n_written - n_accepted
+        if rejected:
+            # host mirror of truncate's data-dependent page release
+            first = self._first_page[slot]
+            end = first + self._n_pages[slot]
+            new_len = self._seq_lens[slot] + n_accepted
+            keep = min(max(-(-new_len // self.page_size), first), end)
+            self.state = kv_cache.truncate_fast(self.state, slot, rejected,
+                                           self.page_size)
+            self._n_pages[slot] = keep - first
+            self._free += end - keep
+        self._seq_lens[slot] += n_accepted
+        self.stats["spec_accepted"] += n_accepted - 1
         self._reclaim(slot)
 
     def _reclaim(self, slot: int) -> None:
@@ -194,7 +254,7 @@ class Scheduler:
         n = target_first - self._first_page[slot]
         if n <= 0:
             return
-        self.state = kv_cache.release_prefix(self.state, slot, n)
+        self.state = kv_cache.release_prefix_fast(self.state, slot, n)
         self._first_page[slot] = target_first
         self._n_pages[slot] -= n
         self._free += n
@@ -247,8 +307,14 @@ class Scheduler:
         return True
 
     def _youngest_victim(self, exclude: set) -> Optional[int]:
+        """Youngest preemptible sequence that actually owns pages.
+        Zero-page residents (e.g. a sequence admitted earlier in this
+        same ``schedule()`` call, before its first chunk allocated
+        anything) are skipped: preempting one frees nothing — it would
+        be evicted and re-queued for no pool gain."""
         cands = [(s.admit_order, i) for i, s in enumerate(self.active)
-                 if s is not None and i not in exclude]
+                 if s is not None and i not in exclude
+                 and self._n_pages[i] > 0]
         return max(cands)[1] if cands else None
 
     def _preempt(self, slot: int) -> None:
@@ -303,9 +369,18 @@ class Scheduler:
             need = self._pages_for(slot, seq.n_prefilled + 1)
             if not self._try_alloc(slot, need, protected, plan.preempted):
                 continue             # pool exhausted even after preemption
+            drafts = self._propose_drafts(slot, budget)
+            while drafts and not self._alloc_extra(
+                    slot, self._pages_for(slot,
+                                          seq.n_prefilled + 1
+                                          + len(drafts))):
+                drafts.pop()         # shrink drafts to what fits for free
+            if drafts:
+                plan.drafts[slot] = drafts
+                self.stats["spec_drafted"] += len(drafts)
             plan.decode_slots.append(slot)
             protected.add(slot)
-            budget -= 1
+            budget -= 1 + len(drafts)
 
         # 3) chunked prefill with the remaining budget, oldest first
         prefillers = sorted(
@@ -335,6 +410,35 @@ class Scheduler:
             budget -= chunk
 
         return plan
+
+    def _propose_drafts(self, slot: int, budget: int) -> List[int]:
+        """Draft tokens for a decode slot, capped so the verify step can
+        never overshoot: the generation budget (a verify emitting m+1
+        tokens must have m+1 <= remaining), the step token budget (the
+        verify consumes 1 + k lanes), and ``spec_k`` itself."""
+        if self.spec_k <= 0 or self.drafter is None:
+            return []
+        seq = self.active[slot]
+        remaining = seq.req.max_new_tokens - seq.n_generated
+        k = min(self.spec_k, budget - 1, remaining - 1)
+        if k <= 0:
+            return []
+        return [int(t) for t in self.drafter(seq.tokens, k)][:k]
+
+    def _alloc_extra(self, slot: int, need: int) -> bool:
+        """Allocate ``need`` pages for optional (draft) tokens — never
+        preempts and never exceeds the slot's table row: draft KV is a
+        throughput bet, not mandatory work, so it only takes pages that
+        are free anyway."""
+        if need == 0:
+            return True
+        if need > self._free or self._first_page[slot] \
+                + self._n_pages[slot] + need > self.state.max_pages_per_seq:
+            return False
+        self.state = kv_cache.alloc_pages(self.state, slot, need)
+        self._free -= need
+        self._n_pages[slot] += need
+        return True
 
     def _can_fit(self, slot: int, need: int, protected: set) -> bool:
         """Would ``need`` pages fit, counting preemptible victims' pages?"""
@@ -380,6 +484,12 @@ class Scheduler:
             assert (table[i][hi:] == -1).all(), \
                 f"slot {i} has mapped pages beyond its extent"
             assert int(st.seq_lens[i]) <= hi * self.page_size
+            # rollback safety: truncate must never pull the write head
+            # behind the first still-mapped page (positions below it were
+            # window-reclaimed and are unrecoverable), and a slot that
+            # owns tokens must still own the pages that hold them
+            assert int(st.seq_lens[i]) >= lo * self.page_size, \
+                f"slot {i} truncated into reclaimed positions"
             if self.window is not None and n_pages[i] > 0:
                 # reclamation keeps every in-window position mapped
                 dead = int(st.seq_lens[i]) - self.window + 1

@@ -1,0 +1,78 @@
+"""Model-free speculative drafting: prompt-lookup (n-gram) proposal.
+
+The paper's flexible-``z`` junction keeps a fixed pool of multiply-
+accumulate lanes busy every cycle regardless of junction size; the
+serving engine's per-step token budget is the software analog of those
+lanes. Plain decode issues exactly ONE token per sequence per step, so
+whenever decode dominates, most of the budget idles. Speculative decode
+refills it: a cheap drafter proposes up to ``k`` continuation tokens per
+sequence, and the engine verifies pending + drafts in ONE multi-token
+``paged_step`` (the same chunk path prefill uses), accepting the longest
+greedily-matching prefix. Greedy acceptance makes the output
+token-identical to plain decode — speculation changes throughput, never
+content — which is exactly the invariant the serving certification
+tests pin.
+
+The drafter here is the simplest one that wins in practice on
+repetitive text (prompt-lookup decoding): match the sequence's own
+trailing n-gram against its earlier history and propose the tokens that
+followed the most recent earlier occurrence. No draft model, no extra
+parameters, no device work — the proposal is pure host-side list
+matching, so a miss costs only the wasted verify lanes.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = ["PromptLookupDrafter", "propose_drafts"]
+
+
+def propose_drafts(tokens: Sequence[int], k: int, *, max_ngram: int = 3,
+                   min_ngram: int = 1) -> List[int]:
+    """Propose up to ``k`` draft tokens continuing ``tokens``.
+
+    Tries suffix n-grams from ``max_ngram`` down to ``min_ngram``; for
+    the first length with an earlier occurrence in the history, returns
+    the (up to ``k``) tokens that followed the MOST RECENT such
+    occurrence. Returns ``[]`` on no match — the engine then falls back
+    to plain single-token decode for that slot.
+
+    The match runs as ``n`` vectorised comparisons over the history (this
+    sits on the per-slot-per-step decode hot path; a Python scan over
+    positions costs more than the drafts save).
+    """
+    if k <= 0:
+        return []
+    toks = np.asarray(tokens, np.int64)
+    n_tok = len(toks)
+    for n in range(max_ngram, min_ngram - 1, -1):
+        if n_tok <= n:
+            continue
+        pat = toks[-n:]
+        # candidate starts 0..n_tok-n-1 (the suffix occurrence itself is
+        # excluded); overlapping matches are fine: they capture periodic
+        # runs
+        hit = toks[:n_tok - n] == pat[0]
+        for j in range(1, n):
+            hit &= toks[j:j + n_tok - n] == pat[j]
+        idx = np.flatnonzero(hit)
+        if idx.size:
+            i = int(idx[-1])          # most recent occurrence
+            return [int(t) for t in toks[i + n:i + n + k]]
+    return []
+
+
+class PromptLookupDrafter:
+    """Callable drafter the scheduler holds: ``drafter(tokens, k)``."""
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def __call__(self, tokens: Sequence[int], k: int) -> List[int]:
+        return propose_drafts(tokens, k, max_ngram=self.max_ngram,
+                              min_ngram=self.min_ngram)

@@ -55,12 +55,19 @@ class HeartbeatMonitor:
         return [h for h, st in self.hosts.items()
                 if now - st.last_seen > self.timeout]
 
-    def stragglers(self) -> List[str]:
-        if not self.hosts:
+    def stragglers(self, now: Optional[float] = None) -> List[str]:
+        """Live hosts whose step lags the lead by the threshold. Dead
+        hosts are excluded from BOTH the lead computation and the
+        returned list: a dead host that stopped beating behind the pack
+        is not a straggler (it is handled by ``dead()``), and a dead
+        host that died ahead of the pack must not drag the lead up and
+        flag every healthy host."""
+        alive = self.healthy(now)
+        if not alive:
             return []
-        lead = max(st.step for st in self.hosts.values())
-        return [h for h, st in self.hosts.items()
-                if lead - st.step >= self.straggler_steps]
+        lead = max(self.hosts[h].step for h in alive)
+        return [h for h in alive
+                if lead - self.hosts[h].step >= self.straggler_steps]
 
     def healthy(self, now: Optional[float] = None) -> List[str]:
         d = set(self.dead(now))
@@ -118,6 +125,13 @@ class RestartLoop:
                     executed += 1
                     if (step + 1) % self.policy.checkpoint_every == 0:
                         self.save_fn(step + 1)
+                        # a checkpoint landing IS progress: reset the
+                        # failure budget so max_failures bounds
+                        # consecutive no-progress crash loops, not the
+                        # total transient-fault count over a job's
+                        # lifetime (a month-long run would otherwise be
+                        # killed by its 11th unrelated blip)
+                        self.failures = 0
                 self.save_fn(total_steps)
                 return executed
             except RuntimeError:

@@ -28,7 +28,8 @@ from repro.kernels.flash_attention import paged_decode_attention
 from repro.launch.serve import generate, generate_cached
 from repro.nn import ModelConfig, SparsityConfig, build_model
 from repro.serving import EngineConfig, ServingEngine, kv_cache
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request, Scheduler, StepPlan
+from repro.serving.spec import propose_drafts
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +125,119 @@ def test_physical_addresses_redirect_invalid_to_trash():
     # which must also redirect to trash rather than index page -1
     assert phys.tolist() == [[2, 2, 0, 7]]
     assert off.tolist() == [[0, 3, 0, 1]]
+
+
+def test_truncate_releases_tail_pages():
+    """Unit: rolling back tokens frees exactly the pages left with no
+    live token, reverts their table entries, and keeps the rest."""
+    st_ = kv_cache.init_page_state(slots=2, total_pages=8,
+                                   max_pages_per_seq=4)
+    st_ = kv_cache.alloc_pages(st_, 0, 3)          # room for 12 tokens
+    st_ = kv_cache.advance(st_, 0, 9)              # 9 written (3 pages)
+    st_ = kv_cache.truncate(st_, 0, 5, page_size=4)
+    assert int(st_.seq_lens[0]) == 4               # 1 page still live
+    assert int(st_.n_pages[0]) == 1
+    assert int(st_.free_count) == 7
+    row = np.asarray(st_.page_table[0])
+    assert (row[1:] == -1).all() and row[0] >= 0
+    # freed ids are unique and allocatable again
+    ids = np.asarray(st_.free_stack)[:7]
+    assert len(set(ids.tolist())) == 7
+    # full rollback empties the slot
+    st_ = kv_cache.truncate(st_, 0, 4, page_size=4)
+    assert int(st_.n_pages[0]) == 0
+    assert int(st_.free_count) == 8
+    assert (np.asarray(st_.page_table[0]) == -1).all()
+
+
+def test_truncate_respects_reclaimed_prefix():
+    """Truncate after sliding-window reclamation: tail pages free, the
+    (already-released) prefix stays untouched and first_page holds."""
+    st_ = kv_cache.init_page_state(slots=1, total_pages=8,
+                                   max_pages_per_seq=6)
+    st_ = kv_cache.alloc_pages(st_, 0, 4)
+    st_ = kv_cache.advance(st_, 0, 14)             # pages 0..3, ps=4
+    st_ = kv_cache.release_prefix(st_, 0, 2)       # window reclaimed 0,1
+    assert int(st_.first_page[0]) == 2
+    st_ = kv_cache.truncate(st_, 0, 5, page_size=4)  # 14 -> 9 tokens
+    assert int(st_.seq_lens[0]) == 9               # page 2 holds 8..11
+    assert int(st_.first_page[0]) == 2
+    assert int(st_.n_pages[0]) == 1                # page 3 released
+    assert int(st_.free_count) == 7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=500))
+def test_truncate_page_accounting_property(seed):
+    """Random alloc/advance/truncate/free streams against a host-side
+    mirror: no page leaks, no double-maps/frees, tail release exact —
+    the allocator-level certification of speculative rollback."""
+    rng = np.random.default_rng(seed)
+    slots, total, ps, maxp = 3, 10, 4, 5
+    st_ = kv_cache.init_page_state(slots, total, maxp)
+    n_pages = [0] * slots
+    seq = [0] * slots
+    free = total
+    for _ in range(60):
+        slot = int(rng.integers(slots))
+        op = ["alloc", "advance", "truncate", "free"][int(rng.integers(4))]
+        if op == "alloc":
+            n = int(rng.integers(0, min(maxp - n_pages[slot], free) + 1))
+            st_ = kv_cache.alloc_pages(st_, slot, n)
+            n_pages[slot] += n
+            free -= n
+        elif op == "advance":
+            n = int(rng.integers(0, n_pages[slot] * ps - seq[slot] + 1))
+            st_ = kv_cache.advance(st_, slot, n)
+            seq[slot] += n
+        elif op == "truncate":
+            n = int(rng.integers(0, seq[slot] + 1))
+            st_ = kv_cache.truncate(st_, slot, n, ps)
+            if n:
+                seq[slot] -= n
+                keep = min(-(-seq[slot] // ps), n_pages[slot])
+                free += n_pages[slot] - keep
+                n_pages[slot] = keep
+        else:
+            st_ = kv_cache.free_slot(st_, slot)
+            free += n_pages[slot]
+            n_pages[slot] = 0
+            seq[slot] = 0
+        assert int(st_.free_count) == free
+        assert list(np.asarray(st_.n_pages)) == n_pages
+        assert list(np.asarray(st_.seq_lens)) == seq
+        table = np.asarray(st_.page_table)
+        mapped = table[table >= 0].tolist()
+        assert len(set(mapped)) == len(mapped) == sum(n_pages)
+        stack_ids = set(np.asarray(st_.free_stack)[:free].tolist())
+        assert len(stack_ids) == free, "duplicate ids on the free stack"
+        assert not stack_ids & set(mapped), "page both free and mapped"
+    # drain everything: the whole pool must come back exactly once
+    for slot in range(slots):
+        st_ = kv_cache.free_slot(st_, slot)
+    assert int(st_.free_count) == total
+    assert set(np.asarray(st_.free_stack).tolist()) == set(range(total))
+
+
+# ---------------------------------------------------------------------------
+# prompt-lookup drafter
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_lookup_drafter_continues_periodic_runs():
+    # periodic sequence: the 3-gram suffix recurs, drafts continue it
+    assert propose_drafts([1, 2, 3, 1, 2, 3, 1, 2], 3) == [3, 1, 2]
+    # most RECENT earlier occurrence wins
+    assert propose_drafts([7, 5, 9, 5, 8, 5], 2,
+                          max_ngram=1) == [8, 5]
+    # falls back to shorter n-grams when the long suffix never recurred
+    assert propose_drafts([1, 2, 9, 3, 9], 2) == [3, 9]
+    # fewer than k tokens may follow the match
+    assert propose_drafts([9, 9, 9, 9], 2) == [9]
+    # no match / degenerate inputs -> no drafts, never an exception
+    assert propose_drafts([5, 6, 7], 2) == []
+    assert propose_drafts([5], 3) == []
+    assert propose_drafts([1, 2, 3], 0) == []
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +351,121 @@ def test_windowed_scheduler_reclaims_without_leaks_or_double_frees(case):
     sched.check_invariants()
     if not any(s is not None for s in sched.active) and not sched.waiting:
         assert sched.state.free() == total_pages
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheduler_cases())
+def test_scheduler_spec_rollback_no_leaks(case):
+    """The speculative property test: same random driver, but decode
+    slots carry random drafts and the driver accepts a random prefix
+    (mimicking greedy verification), exercising note_verified's
+    advance + truncate + (optionally window-)reclaim path. Page
+    invariants must hold after every step and the pool must drain."""
+    slots, total_pages, page_size, max_pages, budget, chunk, n_reqs, seed \
+        = case
+    rng = np.random.default_rng(seed)
+    window = int(rng.integers(1, 2 * page_size + 1)) \
+        if seed % 2 else None
+    spec_k = int(rng.integers(1, 5))
+
+    def random_drafter(tokens, k):
+        return [int(t) for t in rng.integers(0, 99, k)]
+
+    cap = min(max_pages, total_pages) * page_size
+    sched = Scheduler(slots=slots, total_pages=total_pages,
+                      page_size=page_size, max_pages_per_seq=max_pages,
+                      token_budget=budget, prefill_chunk=chunk,
+                      window=window, spec_k=spec_k,
+                      drafter=random_drafter)
+    for i in range(n_reqs):
+        plen = int(rng.integers(1, max(2, cap - 1)))
+        gen = int(rng.integers(1, max(2, cap - plen)))
+        sched.add(Request(req_id=i, prompt=rng.integers(0, 99, plen),
+                          max_new_tokens=gen))
+    for _ in range(500):
+        if not sched.has_work():
+            break
+        plan = sched.schedule()
+        sched.check_invariants()
+        for slot, start, toks in plan.prefills:
+            seq = sched.active[slot]
+            sched.advance_prefill(slot, len(toks))
+            if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
+                sched.append_token(slot, int(rng.integers(0, 99)))
+        for slot in plan.decode_slots:
+            drafts = plan.drafts.get(slot, [])
+            m = int(rng.integers(0, len(drafts) + 1))
+            sched.note_verified(slot, n_written=1 + len(drafts),
+                                n_accepted=1 + m)
+            sched.check_invariants()
+            for _ in range(1 + m):
+                sched.append_token(slot, int(rng.integers(0, 99)))
+        for slot in range(slots):
+            seq = sched.active[slot]
+            if seq is not None and seq.done:
+                sched.finish(slot)
+        sched.check_invariants()
+        if plan.n_tokens == 0 and not plan.admitted:
+            break
+    sched.check_invariants()
+    if not any(s is not None for s in sched.active) and not sched.waiting:
+        assert sched.state.free() == total_pages
+
+
+def test_scheduler_skips_zero_page_victims():
+    """Regression: ``_youngest_victim`` could select a sequence admitted
+    earlier in the SAME ``schedule()`` call — zero pages allocated — so
+    ``_try_alloc`` evicted and re-queued it while freeing nothing. Two
+    decoders at a page boundary + one fresh admission force the case."""
+    sched = Scheduler(slots=3, total_pages=3, page_size=2,
+                      max_pages_per_seq=3, token_budget=8,
+                      prefill_chunk=8)
+    for i in (0, 1):
+        sched.add(Request(req_id=i, prompt=np.asarray([1, 2], np.int32),
+                          max_new_tokens=4))
+    plan = sched.schedule()
+    for slot, start, toks in plan.prefills:
+        sched.advance_prefill(slot, len(toks))
+        seq = sched.active[slot]
+        if not seq.prefilling and len(seq.tokens) == seq.n_prefilled:
+            sched.append_token(slot, 7)
+    sched.check_invariants()
+    # both residents decode next step and need a fresh page (boundary);
+    # one free page remains, so the younger decoder's allocation fails
+    # with the just-admitted (zero-page) request as the youngest resident
+    sched.add(Request(req_id=2, prompt=np.asarray([5, 6], np.int32),
+                      max_new_tokens=1))
+    plan2 = sched.schedule()
+    assert plan2.admitted == [2]
+    # pre-fix: slot 2 was evicted (freeing zero pages) and re-queued,
+    # leaving the slot empty and the pool no better off
+    assert sched.active[2] is not None, \
+        "zero-page victim was preempted (freed nothing)"
+    assert 2 not in plan2.preempted
+    assert plan2.decode_slots == [0]   # the younger decoder just waits
+    # slot 2's own prefill then preempts the page-OWNING decoder (slot
+    # 1) — a legitimate eviction that actually frees a page
+    assert plan2.preempted == [1]
+    sched.check_invariants()
+
+
+def test_scheduler_packs_equal_length_prefill_groups():
+    """Equal-length power-of-two chunks from different sequences land in
+    one batched group; unequal lengths stay separate (rectangular rows
+    are required by the SSM full-scan path)."""
+    sched = Scheduler(slots=4, total_pages=32, page_size=4,
+                      max_pages_per_seq=8, token_budget=32,
+                      prefill_chunk=8)
+    for i, plen in enumerate((8, 8, 8, 3)):
+        sched.add(Request(
+            req_id=i, prompt=np.arange(plen, dtype=np.int32),
+            max_new_tokens=1))
+    plan = sched.schedule()
+    groups = plan.prefill_groups
+    by_len = {len(g[0][2]): sorted(item[0] for item in g) for g in groups}
+    assert by_len[8] == [0, 1, 2]   # three chunks -> ONE batched call
+    assert by_len[2] == [3]         # pow2 chunk of the length-3 prompt
+    assert plan.n_tokens == 26
 
 
 def test_windowed_page_occupancy_stays_bounded():
@@ -389,6 +618,180 @@ def test_paged_decode_logits_match_full_forward(sparse, backend, interp):
         np.testing.assert_allclose(np.asarray(logits)[0, 0],
                                    full_logits(pos + 1),
                                    atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# speculative decode certification
+# ---------------------------------------------------------------------------
+
+
+def _periodic_prompt(rng, vocab, period, reps):
+    motif = rng.integers(0, vocab, period).astype(np.int32)
+    return np.tile(motif, reps)
+
+
+def _check_spec_vs_baseline(model, params, prompts, steps, spec_k=4,
+                            **ecfg_kw):
+    """Certify: greedy speculative decode is token-identical to the
+    non-speculative engine (the PR-3 baseline path) on the same
+    requests. Returns the speculative engine for stats assertions."""
+    base = ServingEngine(model, params, EngineConfig(**ecfg_kw))
+    ref = base.run(list(prompts), steps)
+    eng = ServingEngine(model, params,
+                        EngineConfig(spec_k=spec_k, **ecfg_kw))
+    out = eng.run(list(prompts), steps)
+    eng.sched.check_invariants()
+    for i, (a, b) in enumerate(zip(ref, out)):
+        assert a.tolist() == b.tolist(), \
+            f"req {i}: spec {b.tolist()} != baseline {a.tolist()}"
+    return eng, base
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+def test_spec_decode_token_parity(sparse):
+    """Acceptance: speculative greedy decode == plain greedy decode,
+    dense and sparse junctions, with drafts actually being accepted
+    (repetitive prompts feed the prompt-lookup drafter)."""
+    cfg = _tiny_cfg(sparse=sparse)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(21)
+    prompts = [_periodic_prompt(rng, cfg.vocab_size, 5, 3),
+               rng.integers(0, cfg.vocab_size, 9).astype(np.int32)]
+    eng, base = _check_spec_vs_baseline(
+        model, params, prompts, 16,
+        max_slots=2, page_size=4, total_pages=24, max_pages_per_seq=10,
+        token_budget=24, prefill_chunk=8, backend="xla")
+    assert eng.spec_k == 4
+    assert eng.sched.stats["spec_drafted"] > 0
+    # the multi-token verify must compress steps whenever drafts land
+    if eng.sched.stats["spec_accepted"] > 0:
+        assert eng.sched.stats["steps"] < base.sched.stats["steps"]
+
+
+def test_spec_decode_parity_sliding_window_reclamation():
+    """Speculation + window reclamation together: rollback must never
+    collide with prefix release (reclaim runs only after truncate)."""
+    cfg = _tiny_cfg(sparse=False, layer_pattern=("local",), attn_window=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(22)
+    prompts = [_periodic_prompt(rng, cfg.vocab_size, 4, 3),
+               rng.integers(0, cfg.vocab_size, 5).astype(np.int32)]
+    eng, _ = _check_spec_vs_baseline(
+        model, params, prompts, 24,
+        max_slots=2, page_size=4, total_pages=16, max_pages_per_seq=16,
+        token_budget=16, prefill_chunk=8, backend="xla")
+    assert eng.sched.window == 6
+    assert eng.sched.stats["reclaimed_pages"] > 0
+    assert eng.sched.stats["spec_drafted"] > 0
+
+
+def test_spec_decode_parity_under_preemption():
+    """A pool too small for all requests forces evict + recompute while
+    speculation is active; outputs still match the baseline engine."""
+    cfg = _tiny_cfg(sparse=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(23)
+    prompts = [_periodic_prompt(rng, cfg.vocab_size, 4, 2 + i % 2)
+               for i in range(4)]
+    eng, _ = _check_spec_vs_baseline(
+        model, params, prompts, 8,
+        max_slots=4, page_size=4, total_pages=7, max_pages_per_seq=6,
+        token_budget=12, prefill_chunk=8, backend="xla")
+    assert eng.sched.stats["preempted"] > 0, \
+        "pool was sized to force preemption"
+
+
+def test_spec_decode_parity_hybrid_attention_arch():
+    """gemma3 smoke (sliding-window locals + globals under scan groups):
+    an attention-only hybrid serves speculatively with full parity."""
+    from repro.configs import get_config
+    cfg = get_config("gemma3_4b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(24)
+    prompts = [_periodic_prompt(rng, cfg.vocab_size, 4, 2),
+               rng.integers(0, cfg.vocab_size, 6).astype(np.int32)]
+    eng, _ = _check_spec_vs_baseline(
+        model, params, prompts, 6,
+        max_slots=2, page_size=4, total_pages=12, max_pages_per_seq=6,
+        token_budget=16, prefill_chunk=8, backend="xla")
+    assert eng.spec_k == 4
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "zamba2_1p2b"])
+def test_spec_clamped_for_recurrent_stacks(arch):
+    """Mamba / hybrid-mamba stacks cannot roll a recurrence back, so the
+    engine must clamp ``spec_k`` to 0 — and still serve with parity."""
+    from repro.configs import get_config
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(25)
+    prompts = [_periodic_prompt(rng, cfg.vocab_size, 4, 2),
+               rng.integers(0, cfg.vocab_size, 7).astype(np.int32)]
+    eng, _ = _check_spec_vs_baseline(
+        model, params, prompts, 6,
+        max_slots=2, page_size=4, total_pages=12, max_pages_per_seq=6,
+        token_budget=16, prefill_chunk=8, backend="xla")
+    assert eng.spec_k == 0
+    assert eng.sched.stats["spec_drafted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def test_add_request_rejects_duplicate_req_id():
+    """Regression: an explicit req_id duplicating a queued or in-flight
+    request silently cross-wired outputs/ttft between the two."""
+    cfg = _tiny_cfg(sparse=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=2, page_size=4, total_pages=12, max_pages_per_seq=6,
+        token_budget=16, prefill_chunk=8, backend="xla"))
+    p = np.arange(4, dtype=np.int32)
+    eng.add_request(p, 2, req_id=5)
+    with pytest.raises(ValueError, match="req_id 5"):
+        eng.add_request(p, 2, req_id=5)          # duplicate while queued
+    eng.step()                                   # admit into a slot
+    with pytest.raises(ValueError, match="req_id 5"):
+        eng.add_request(p, 2, req_id=5)          # duplicate in flight
+    while eng.sched.has_work():
+        eng.step()
+    assert len(eng.outputs[5]) == 2
+    eng.add_request(p, 1, req_id=5)              # finished id: reusable
+    # auto ids keep advancing past explicit ones
+    assert eng.add_request(p, 1) > 5
+
+
+def test_run_tolerates_preempt_only_plan(monkeypatch):
+    """Regression: a plan with zero tokens and zero admissions but a
+    preemption (allocations failed AFTER preemption freed pages) made
+    ``run`` declare the engine stuck, even though the freed pages let
+    the very next step progress."""
+    cfg = _tiny_cfg(sparse=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=2, page_size=4, total_pages=12, max_pages_per_seq=6,
+        token_budget=16, prefill_chunk=8, backend="xla"))
+    real = eng.sched.schedule
+    first = {"done": False}
+
+    def preempt_only_once():
+        if not first["done"]:
+            first["done"] = True
+            return StepPlan(decode_slots=[], prefills=[], preempted=[0])
+        return real()
+
+    monkeypatch.setattr(eng.sched, "schedule", preempt_only_once)
+    outs = eng.run([np.arange(4, dtype=np.int32)], 3)   # pre-fix: raises
+    assert len(outs[0]) == 3
 
 
 # ---------------------------------------------------------------------------

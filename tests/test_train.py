@@ -107,12 +107,66 @@ def test_heartbeat_and_stragglers():
     mon.beat("h0", 10, now)
     mon.beat("h1", 10, now)
     mon.beat("h2", 6, now)
-    assert mon.stragglers() == ["h2"]
+    assert mon.stragglers(now) == ["h2"]
     assert mon.dead(now + 5) == []
     mon.beat("h0", 11, now + 20)
     mon.beat("h2", 7, now + 20)
     assert mon.dead(now + 20) == ["h1"]
     assert set(mon.healthy(now + 20)) == {"h0", "h2"}
+
+
+def test_stragglers_exclude_dead_hosts():
+    """Regression: the lead step was computed over ALL hosts and dead
+    hosts were reported as stragglers too. A host that dies ahead of the
+    pack must not inflate the lead (flagging every live host), and a
+    host that dies behind the pack belongs to dead(), not stragglers()."""
+    mon = HeartbeatMonitor(["h0", "h1", "h2"], timeout_s=10,
+                           straggler_steps=3)
+    now = 100.0
+    mon.beat("h0", 50, now)           # dies ahead of the pack
+    mon.beat("h1", 46, now + 20)
+    mon.beat("h2", 46, now + 20)
+    late = now + 20
+    assert mon.dead(late) == ["h0"]
+    # pre-fix: lead=50 over all hosts -> h1/h2 (lag 4) flagged, and a
+    # dead laggard would be listed as a straggler as well
+    assert mon.stragglers(late) == []
+    mon.beat("h1", 55, late)
+    assert mon.dead(late) == ["h0"]
+    assert mon.stragglers(late) == ["h2"]   # live laggard, dead excluded
+
+
+def test_restart_loop_failures_reset_on_checkpoint_progress():
+    """Regression: ``failures`` accumulated over the job's lifetime, so
+    ``max_failures`` transient faults spread over a long run killed it
+    even though every restart made progress. A landed checkpoint resets
+    the budget; only no-progress crash loops exhaust it."""
+    saved = [0]
+
+    # 4 transient faults with max_failures=3 — but checkpoints land in
+    # between, so the loop must survive all of them
+    state = {"fail_at": {6, 16, 26, 36}}
+
+    def step_fn(step):
+        if step in state["fail_at"]:
+            state["fail_at"].remove(step)
+            raise RuntimeError("injected transient fault")
+
+    loop = RestartLoop(RestartPolicy(max_failures=3, checkpoint_every=5),
+                       lambda s: saved.append(s), lambda: max(saved))
+    loop.run(step_fn, total_steps=40)
+    assert loop.restarts == 4
+
+    # a crash loop that never reaches a checkpoint still dies
+    loop2 = RestartLoop(RestartPolicy(max_failures=3, checkpoint_every=5),
+                        lambda s: None, lambda: 0)
+
+    def always_fail(step):
+        raise RuntimeError("hard fault")
+
+    with pytest.raises(RuntimeError):
+        loop2.run(always_fail, total_steps=40)
+    assert loop2.failures == 4        # max_failures + the raising one
 
 
 def test_remesh_plan_shrinks_to_power_of_two():
