@@ -7,13 +7,10 @@ sense (0 for pure-accuracy rows), ``derived`` is the paper-relevant quantity
 """
 from __future__ import annotations
 
-import sys
-import time
 from functools import lru_cache
 from typing import Callable
 
-import jax
-import numpy as np
+from repro.obs import trace as obs_trace
 
 ROWS = []
 
@@ -24,18 +21,15 @@ def emit(name: str, us_per_call: float, derived):
     print(row, flush=True)
 
 
-def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
-    """Median wall-time per call in microseconds (blocks on jax arrays)."""
-    for _ in range(warmup):
-        r = fn(*args)
-    jax.block_until_ready(r)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        r = fn(*args)
-        jax.block_until_ready(r)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2,
+              name: str = "call") -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays).
+
+    Delegates to ``repro.obs.trace.timed_call``: each iteration is a
+    ``bench/<name>`` span in the shared obs registry, so benchmark rows
+    and live metrics read the same clock."""
+    return obs_trace.timed_call(fn, *args, iters=iters, warmup=warmup,
+                                name=name)
 
 
 @lru_cache(maxsize=4)

@@ -65,7 +65,7 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
     wd = jax.random.normal(jax.random.key(1), (n_in, n_out)) * 0.02
 
     dense = jax.jit(lambda x, w: x @ w)
-    t_dense = time_call(dense, x, wd)
+    t_dense = time_call(dense, x, wd, name="dense_matmul")
     emit("kernel/dense_matmul", t_dense,
          f"{2 * m * n_in * n_out / (t_dense * 1e-6) / 1e9:.1f}GFLOPs")
 
@@ -76,7 +76,7 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
             jax.random.key(2), (bp.n_rb, bp.d_in_b, 128, 128)) * 0.02
         b = jax.random.normal(jax.random.key(3), (n_out,)) * 0.02
         f = jax.jit(lambda x, w: ops.csd_matmul(x, w, bp, backend="xla"))
-        t = time_call(f, x, w)
+        t = time_call(f, x, w, name=f"csd_spmm_rho{rho}")
         emit(f"kernel/csd_spmm_rho{rho}", t,
              f"speedup_vs_dense={t_dense / t:.2f}x")
 
@@ -86,8 +86,8 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
             ops.csd_matmul(x, w, bp, backend="xla") + b))
         fused = jax.jit(lambda x, w, b: ops.csd_matmul(
             x, w, bp, bias=b, activation="relu", backend="xla"))
-        t_unf = time_call(unfused, x, w, b)
-        t_fus = time_call(fused, x, w, b)
+        t_unf = time_call(unfused, x, w, b, name=f"unfused_fwd_rho{rho}")
+        t_fus = time_call(fused, x, w, b, name=f"fused_fwd_rho{rho}")
         emit(f"kernel/fused_fwd_rho{rho}", t_fus,
              f"unfused_us={t_unf:.2f};fused_speedup={t_unf / t_fus:.2f}x")
 
@@ -102,8 +102,10 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
 
         step_unf = jax.jit(jax.value_and_grad(loss_unf, argnums=(0, 1)))
         step_fus = jax.jit(jax.value_and_grad(loss_fus, argnums=(0, 1)))
-        t_sunf = time_call(step_unf, w, b, x)
-        t_sfus = time_call(step_fus, w, b, x)
+        t_sunf = time_call(step_unf, w, b, x,
+                           name=f"unfused_step_rho{rho}")
+        t_sfus = time_call(step_fus, w, b, x,
+                           name=f"fused_step_rho{rho}")
         emit(f"kernel/fused_step_rho{rho}", t_sfus,
              f"unfused_us={t_sunf:.2f};fused_speedup={t_sunf / t_sfus:.2f}x")
 
@@ -119,8 +121,9 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
                                                 backend="xla"))
     for m_dec in (1, 2, 4, 8):
         xm = jax.random.normal(jax.random.key(6), (m_dec, n_in))
-        t_dm = time_call(dense, xm, wd)
-        t_sm = time_call(f_dec, xm, w_dec)
+        t_dm = time_call(dense, xm, wd, name=f"decode_dense_m{m_dec}")
+        t_sm = time_call(f_dec, xm, w_dec,
+                         name=f"decode_csd_m{m_dec}")
         emit(f"kernel/csd_decode_m{m_dec}_rho0.25", t_sm,
              f"dense_us={t_dm:.2f};speedup_vs_dense={t_dm / t_sm:.2f}x")
 
@@ -152,7 +155,7 @@ def run_batched(E: int = 8, d: int = 512, d_e: int = 1024, c: int = 256):
 
     wd = jax.random.normal(jax.random.key(1), (E, d, d_e)) * 0.02
     dense = jax.jit(lambda x, w: jnp.einsum("ecd,edf->ecf", x, w))
-    t_dense = time_call(dense, xe, wd)
+    t_dense = time_call(dense, xe, wd, name="moe_dense_einsum")
     flops = 2 * E * c * d * d_e
     emit("kernel/moe_dense_einsum", t_dense,
          f"{flops / (t_dense * 1e-6) / 1e9:.1f}GFLOPs")
@@ -161,7 +164,7 @@ def run_batched(E: int = 8, d: int = 512, d_e: int = 1024, c: int = 256):
         return jnp.mean(jnp.einsum("ecd,edf->ecf", x, w) ** 2)
 
     sd = jax.jit(jax.value_and_grad(step_dense))
-    t_sdense = time_call(sd, wd, xe)
+    t_sdense = time_call(sd, wd, xe, name="moe_dense_step")
     emit("kernel/moe_dense_step", t_sdense, "")
 
     for rho in (0.5, 0.25, 0.125):
@@ -172,7 +175,7 @@ def run_batched(E: int = 8, d: int = 512, d_e: int = 1024, c: int = 256):
             (E, bp.n_rb, bp.d_in_b, 128, 128)) * 0.02
         f = jax.jit(lambda x, w, bp=bp: ops.csd_matmul(x, w, bp,
                                                        backend="xla"))
-        t = time_call(f, xe, w)
+        t = time_call(f, xe, w, name=f"moe_batched_csd_rho{rho}")
         emit(f"kernel/moe_batched_csd_rho{rho}", t,
              f"speedup_vs_dense={t_dense / t:.2f}x")
 
@@ -180,7 +183,7 @@ def run_batched(E: int = 8, d: int = 512, d_e: int = 1024, c: int = 256):
             return jnp.mean(ops.csd_matmul(x, w, bp, backend="xla") ** 2)
 
         ss = jax.jit(jax.value_and_grad(step_sparse))
-        t_ss = time_call(ss, w, xe)
+        t_ss = time_call(ss, w, xe, name=f"moe_batched_step_rho{rho}")
         emit(f"kernel/moe_batched_step_rho{rho}", t_ss,
              f"speedup_vs_dense={t_sdense / t_ss:.2f}x")
 
@@ -216,8 +219,8 @@ def run_sharded(quick: bool = True, n_in: int = 1024, n_out: int = 4096,
             x, w, bp, backend="xla"))
         fk = jax.jit(lambda x, w, bp=bp: ops.csd_matmul(
             x, w, bp, backend="xla", mesh=mesh, axis="model"))
-        t1 = time_call(f1, x, w)
-        tk = time_call(fk, x, w)
+        t1 = time_call(f1, x, w, name=f"sharded_single_rho{rho}")
+        tk = time_call(fk, x, w, name=f"sharded_csd_rho{rho}")
         flops = 2 * m * bp.n_weight_elems
         emit(f"kernel/sharded_csd_rho{rho}", tk,
              f"single_us={t1:.2f};gflops={flops / (tk * 1e-6) / 1e9:.1f};"
@@ -230,8 +233,10 @@ def run_sharded(quick: bool = True, n_in: int = 1024, n_out: int = 4096,
             return jnp.mean(ops.csd_matmul(
                 x, w, bp, backend="xla", mesh=mesh, axis="model") ** 2)
 
-        ts1 = time_call(jax.jit(jax.value_and_grad(step1)), w, x)
-        tsk = time_call(jax.jit(jax.value_and_grad(stepk)), w, x)
+        ts1 = time_call(jax.jit(jax.value_and_grad(step1)), w, x,
+                        name=f"sharded_step1_rho{rho}")
+        tsk = time_call(jax.jit(jax.value_and_grad(stepk)), w, x,
+                        name=f"sharded_stepk_rho{rho}")
         emit(f"kernel/sharded_step_rho{rho}", tsk,
              f"single_us={ts1:.2f};devices={n_dev}")
 

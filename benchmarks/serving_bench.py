@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.nn import build_model
+from repro.obs import trace as obs_trace
 from repro.serving import EngineConfig, ServingEngine
 
 from .common import emit
@@ -126,13 +127,25 @@ def engine_generate(eng: ServingEngine, prompts, steps: int):
     """One engine run (the engine — and its compiled step — is reused
     across calls; warm up with a short run first).
 
+    Timing and latency come from the engine's own obs registry — the
+    benchmark reads the same counters/histograms the live ``/metrics``
+    endpoint serves, instead of keeping a second set of clocks: the run
+    is bracketed by a ``bench/engine_run`` span and TTFT is the delta of
+    the ``serving_ttft_seconds`` histogram over the run.
+
     Returns (outputs, tokens/sec, mean ttft seconds, stats)."""
-    eng.ttft.clear()
-    t0 = time.perf_counter()
-    outs = eng.run(prompts, steps)
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(o) for o in outs)
-    ttft = float(np.mean(list(eng.ttft.values()))) if eng.ttft else 0.0
+    reg = eng.obs
+    emit_c = reg.counter("serving_emitted_tokens_total")
+    ttft_h = reg.histogram("serving_ttft_seconds")
+    n0 = emit_c.value()
+    c0, s0 = ttft_h.stats()
+    with obs_trace.span("bench/engine_run", registry=reg, reqs=len(prompts)):
+        outs = eng.run(prompts, steps)
+    durs = reg.span_durations("bench/engine_run")
+    dt = durs[-1] if durs else 1e-9
+    n_tok = emit_c.value() - n0
+    c1, s1 = ttft_h.stats()
+    ttft = (s1 - s0) / (c1 - c0) if c1 > c0 else 0.0
     return outs, n_tok / max(dt, 1e-9), ttft, dict(eng.sched.stats)
 
 
@@ -275,9 +288,18 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None,
                     help="write results to this JSON file (CI artifact)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the bench here")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append obs registry events to this JSONL file")
     args = ap.parse_args()
-    res = run(arch=args.arch, batch=args.batch, prompt_len=args.prompt_len,
-              steps=args.gen, page_size=args.page_size, quick=args.quick)
+    if args.metrics_jsonl:
+        from repro.obs import get_registry
+        get_registry().set_jsonl(args.metrics_jsonl)
+    with obs_trace.profile_trace(args.profile_dir):
+        res = run(arch=args.arch, batch=args.batch,
+                  prompt_len=args.prompt_len, steps=args.gen,
+                  page_size=args.page_size, quick=args.quick)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2)

@@ -92,9 +92,9 @@ def main():
     print(f"{args.arch} [engine]: {n_tok} tokens over {args.batch} "
           f"requests (prompt lens {lens}) at {n_tok / dt:.1f} tok/s; "
           f"stats={eng.sched.stats}")
-    if eng.ttft:
-        ms = 1e3 * float(np.mean(list(eng.ttft.values())))
-        print(f"  mean time-to-first-token: {ms:.1f} ms")
+    cnt, tot = eng.obs.histogram("serving_ttft_seconds").stats()
+    if cnt:
+        print(f"  mean time-to-first-token: {1e3 * tot / cnt:.1f} ms")
     for i in range(min(2, args.batch)):
         print(f"  req{i} (len {lens[i]}): {outs[i][:16]} ...")
 

@@ -403,4 +403,9 @@ def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
         from ..analysis.pattern_pass import check_pattern
         _check_or_raise(check_pattern, bp,
                         f"fit_block_pattern({n_in}x{n_out}, rho={rho})")
+    # export the junction's static complexity accounting (sparse/dense
+    # MACs, storage, rho, speedup) as live gauges — every junction the
+    # model instantiates becomes observable at fit time
+    from ..obs import flops as _obs_flops
+    _obs_flops.register(bp)
     return bp

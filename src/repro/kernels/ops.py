@@ -69,9 +69,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.block_pattern import BlockPattern
+from ..obs import metrics as _obs_metrics
 from . import csd_spmm, ref
 from .csd_spmm import apply_activation  # noqa: F401 — re-export: layers
 #   applying the nonlinearity out-of-kernel use the same one definition
+
+
+def _count_dispatch(backend: str, form: str) -> None:
+    """Per-backend junction dispatch counter. ``csd_matmul`` is called at
+    trace time (host-side Python inside ``jax.jit``), so this counts
+    junction *instantiations per compiled executable*, not per-step
+    executions — which is the useful number: it says which backend/form
+    every compiled program routed each junction through, without putting
+    any op (or host sync) into the traced program itself."""
+    _obs_metrics.get_registry().counter(
+        "repro_junction_dispatch_total",
+        "csd_matmul dispatches by backend/form (counted at trace time)",
+    ).inc(backend=backend, form=form)
 
 
 def _on_tpu() -> bool:
@@ -708,9 +722,12 @@ def csd_matmul(
             f"count E={w.shape[0]}")
     backend = _resolve(backend)
     if mesh is not None and axis is not None:
+        _count_dispatch(backend, "sharded_batched" if batched
+                        else "sharded")
         return _csd_matmul_sharded(x, w, pattern, bias, activation,
                                    backend, block_m, interpret, mesh, axis,
                                    lead_spec)
+    _count_dispatch(backend, "batched" if batched else "plain")
     pat = _Pat(pattern)
     has_bias = bias is not None
     b = bias if has_bias else jnp.zeros((0,), x.dtype)

@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--simulate-failure-at", type=int, default=0)
     ap.add_argument("--rho", type=float, default=None,
                     help="override FFN sparsity density (paper's rho)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run here")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append obs registry events to this JSONL file")
     args = ap.parse_args()
 
     from ..configs import get_config
@@ -61,6 +65,10 @@ def main():
         axes = tuple(axes_s.split(","))
         mesh = jax.make_mesh(shape, axes)
 
+    if args.metrics_jsonl:
+        from ..obs import get_registry
+        get_registry().set_jsonl(args.metrics_jsonl)
+
     tc = TrainerConfig(
         opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
                         total_steps=args.steps),
@@ -68,6 +76,7 @@ def main():
         diloco_period=args.diloco,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
+        profile_dir=args.profile_dir,
     )
     trainer = Trainer(model, tc, mesh=mesh)
     data = BigramLM(vocab_size=cfg.vocab_size, seed=0)

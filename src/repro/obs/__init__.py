@@ -1,0 +1,30 @@
+"""repro.obs — unified metrics, tracing, and sparse-FLOP accounting.
+
+A dependency-free (stdlib-only core) observability layer threaded through
+every hot path of the repo:
+
+* ``metrics`` — process-local registry of counters/gauges/fixed-bucket
+  histograms with labels, a Prometheus-text exporter, a JSONL event sink
+  with monotonic timestamps, and an optional stdlib ``/metrics`` HTTP
+  endpoint. All recording is host-side, outside jit: jitted step
+  functions are byte-identical with obs on or off.
+* ``trace``   — ``span()`` context manager stamping the JSONL stream and
+  bracketing phases with ``jax.profiler.TraceAnnotation`` so they appear
+  named in XLA profiles; ``profile_trace()`` captures a real profiler
+  trace (the ``--profile-dir`` knobs route here).
+* ``flops``   — per-junction static accounting from each ``BlockPattern``
+  (sparse/dense MACs, storage bytes, the paper's density rho and speedup
+  factor), registered at ``fit_block_pattern`` time and exported as
+  gauges — the paper's Table-III complexity numbers as live metrics.
+* ``dump``    — ``python -m repro.obs.dump``: replay a recorded JSONL
+  stream and render it as text/JSON/Prometheus.
+"""
+from . import flops, metrics, trace  # noqa: F401
+from .metrics import (  # noqa: F401
+    Registry, disabled_registry, get_registry, serve_http,
+)
+from .trace import profile_trace, span, timed_call  # noqa: F401
+
+__all__ = ["metrics", "trace", "flops", "Registry", "get_registry",
+           "disabled_registry", "serve_http", "span", "profile_trace",
+           "timed_call"]

@@ -1,0 +1,90 @@
+"""Span API + XLA profiler bridging.
+
+``span("prefill", seq=3)`` times a host-side phase: the duration lands in
+the registry (``repro_span_seconds`` histogram, labeled by span name, plus
+a raw-duration ring the benchmarks read) and — when jax is importable —
+the span body is bracketed with ``jax.profiler.TraceAnnotation`` so
+engine/trainer phases show up *named* in XLA profile traces captured via
+:func:`profile_trace`.
+
+Spans wrap host code *around* jitted calls; they never enter a traced
+program, so the jitted executables are identical with tracing on or off
+(the same purity contract as ``obs.metrics``).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional
+
+from . import metrics
+
+try:  # obs stays importable without jax (dependency-free contract)
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:  # pragma: no cover - jax is present in this repo
+    _TraceAnnotation = None
+
+
+@contextlib.contextmanager
+def span(name: str, registry: Optional[metrics.Registry] = None,
+         annotate: bool = True, **attrs):
+    """Time a named host-side phase.
+
+    * records the wall-clock duration into ``registry`` (process default
+      when ``None``) as a ``repro_span_seconds`` histogram sample + a raw
+      duration + a JSONL ``span`` event (with ``attrs``);
+    * brackets the body with ``jax.profiler.TraceAnnotation(name)`` (when
+      available and ``annotate``), so a concurrently captured XLA profile
+      shows the phase by name.
+    """
+    reg = metrics.resolve(registry)
+    ann = _TraceAnnotation(name) if (annotate and _TraceAnnotation
+                                     is not None and reg.enabled) else None
+    if ann is not None:
+        ann.__enter__()
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        dt = time.perf_counter() - t0
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        if reg.enabled:
+            reg.record_span(name, dt, attrs or None)
+
+
+@contextlib.contextmanager
+def profile_trace(log_dir: Optional[str]):
+    """Capture a real ``jax.profiler.trace`` into ``log_dir`` for the
+    duration of the block (no-op when ``log_dir`` is falsy — callers wire
+    a ``--profile-dir`` knob straight through). Spans inside the block
+    appear as named TraceAnnotations in the captured timeline."""
+    if not log_dir:
+        yield
+        return
+    import jax
+    with jax.profiler.trace(log_dir):
+        yield
+
+
+def timed_call(fn, *args, iters: int = 10, warmup: int = 2,
+               name: str = "call",
+               registry: Optional[metrics.Registry] = None) -> float:
+    """Median wall-time per call in microseconds, measured THROUGH the
+    registry: each timed iteration runs under ``span(f"bench/{name}")``
+    and the return value is the median of the durations the registry
+    recorded — benchmark tables and live metrics share one clock and one
+    stream (they cannot disagree). Blocks on jax arrays."""
+    import jax
+    import numpy as np
+
+    reg = metrics.resolve(registry)
+    sname = f"bench/{name}"
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    for _ in range(iters):
+        with span(sname, registry=reg):
+            jax.block_until_ready(fn(*args))
+    ds = reg.span_durations(sname)[-iters:]
+    return float(np.median(ds) * 1e6)

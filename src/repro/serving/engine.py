@@ -53,6 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..nn.common import dtype_of, mesh_context
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .scheduler import Request, Scheduler, StepPlan
 from .spec import PromptLookupDrafter
 
@@ -79,6 +81,13 @@ class EngineConfig:
     # that already stepped over it cannot.
     spec_k: int = 0
     spec_ngram: int = 3         # longest suffix n-gram the drafter matches
+    # observability: ``metrics`` routes the engine's host-side counters/
+    # gauges/histograms through the process obs registry (False = no-op
+    # registry; the jitted step functions are identical either way —
+    # recording never enters a traced program). ``metrics_port`` serves
+    # the registry at http://127.0.0.1:<port>/metrics (0 = ephemeral).
+    metrics: bool = True
+    metrics_port: Optional[int] = None
 
 
 class ServingEngine:
@@ -87,6 +96,7 @@ class ServingEngine:
 
     def __init__(self, model, params, config: Optional[EngineConfig] = None,
                  *, key: Optional[jax.Array] = None, mesh=None, rules=None,
+                 registry: Optional[obs_metrics.Registry] = None,
                  **overrides):
         cfg = config or EngineConfig(**overrides)
         if overrides and config is not None:
@@ -124,6 +134,40 @@ class ServingEngine:
             and "mamba" not in mc.layer_kinds else 0
         drafter = PromptLookupDrafter(cfg.spec_ngram) if self.spec_k \
             else None
+        # -- observability: all recording is host-side, around (never
+        # inside) the jitted step — with metrics off the same executables
+        # compile byte-identically (tests/test_obs.py proves it on HLO)
+        self.obs = obs_metrics.resolve(registry, enabled=cfg.metrics)
+        self._m_req = self.obs.counter(
+            "serving_requests_total",
+            "request lifecycle events (added/finished/rejected)")
+        self._m_tok = self.obs.counter(
+            "serving_tokens_total",
+            "tokens processed per phase (prefill/decode/spec_draft)")
+        self._m_emit = self.obs.counter(
+            "serving_emitted_tokens_total", "generated tokens emitted")
+        self._m_spec = self.obs.counter(
+            "serving_spec_tokens_total",
+            "speculative draft tokens by outcome "
+            "(proposed/accepted/rolled_back)")
+        self._m_ttft = self.obs.histogram(
+            "serving_ttft_seconds", "time from add_request to first token")
+        self._m_itl = self.obs.histogram(
+            "serving_itl_seconds",
+            "inter-token latency per slot (consecutive emitted tokens)")
+        self._m_step = self.obs.histogram(
+            "serving_step_seconds", "engine step wall-clock duration")
+        self._m_tps = self.obs.gauge(
+            "serving_tokens_per_s",
+            "instantaneous step throughput (plan tokens / step seconds)")
+        self._m_queue = self.obs.gauge(
+            "serving_queue_depth", "requests waiting for admission")
+        self._m_slots = self.obs.gauge(
+            "serving_active_slots", "resident sequences")
+        self._m_occ = self.obs.gauge(
+            "serving_page_occupancy", "fraction of the KV page pool in use")
+        self._m_pages_hw = self.obs.gauge(
+            "serving_pages_highwater", "max pages ever in use at once")
         self.sched = Scheduler(
             slots=cfg.max_slots, total_pages=cfg.total_pages,
             page_size=cfg.page_size,
@@ -131,13 +175,20 @@ class ServingEngine:
             token_budget=cfg.token_budget,
             prefill_chunk=cfg.prefill_chunk,
             window=self._reclaim_window(mc),
-            spec_k=self.spec_k, drafter=drafter)
+            spec_k=self.spec_k, drafter=drafter, obs=self.obs)
+        self._http = obs_metrics.serve_http(self.obs, cfg.metrics_port) \
+            if cfg.metrics_port is not None else None
         self.cache = model.stack.init_paged_cache(
             cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc))
         self._next_id = 0
         self.outputs: Dict[int, np.ndarray] = {}
-        self.ttft: Dict[int, float] = {}
+        # per-request admission timestamps, pruned at first token (TTFT
+        # recorded) and again at finish — bounded by in-flight requests.
+        # TTFT/ITL themselves live in the obs histograms (label-free, so
+        # state cannot grow with request count — the PR-7 ``ttft`` dict
+        # grew forever).
         self._t_added: Dict[int, float] = {}
+        self._last_tok: List[Optional[float]] = [None] * cfg.max_slots
 
         self.mesh = mesh
         self.rules = rules
@@ -201,18 +252,25 @@ class ServingEngine:
 
     # -- request intake ----------------------------------------------------
 
+    def _reject(self, reason: str, msg: str) -> ValueError:
+        """Admission rejection: count it, return the error to raise."""
+        self._m_req.inc(event="rejected", reason=reason)
+        return ValueError(msg)
+
     def add_request(self, prompt, max_new_tokens: int,
                     req_id: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) == 0:
-            raise ValueError("empty prompt")
+            raise self._reject("empty_prompt", "empty prompt")
         if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+            raise self._reject("bad_budget",
+                               "max_new_tokens must be >= 1")
         need = len(prompt) + max_new_tokens
         cap = min(self.config.max_pages_per_seq,
                   self.config.total_pages) * self.config.page_size
         if need > cap:
-            raise ValueError(
+            raise self._reject(
+                "too_long",
                 f"request needs {need} tokens but a sequence can hold at "
                 f"most {cap} (min(max_pages_per_seq, total_pages) * "
                 f"page_size)")
@@ -221,14 +279,16 @@ class ServingEngine:
         elif any(r.req_id == req_id for r in self.sched.waiting) or any(
                 s is not None and s.req.req_id == req_id
                 for s in self.sched.active):
-            # a duplicate would silently cross-wire outputs/ttft/_t_added
+            # a duplicate would silently cross-wire outputs/_t_added
             # between the two requests (dict keys collide)
-            raise ValueError(
+            raise self._reject(
+                "duplicate_id",
                 f"req_id {req_id} is already queued or in flight")
         self._next_id = max(self._next_id, req_id) + 1
         self.sched.add(Request(req_id=req_id, prompt=prompt,
                                max_new_tokens=max_new_tokens))
         self._t_added[req_id] = time.perf_counter()
+        self._m_req.inc(event="added")
         return req_id
 
     # -- sampling ----------------------------------------------------------
@@ -246,18 +306,40 @@ class ServingEngine:
 
     def _emit(self, slot: int) -> None:
         seq = self.sched.active[slot]
-        if seq.n_generated == 1 and seq.req.req_id not in self.ttft:
-            t0 = self._t_added.get(seq.req.req_id)
+        now = time.perf_counter()
+        if seq.n_generated == 1:
+            # first token of this request: record TTFT and drop the
+            # admission timestamp (pop = the leak fix; after a preemption
+            # recompute n_generated > 1, so nothing double-records)
+            t0 = self._t_added.pop(seq.req.req_id, None)
             if t0 is not None:
-                self.ttft[seq.req.req_id] = time.perf_counter() - t0
+                self._m_ttft.observe(now - t0)
+        prev = self._last_tok[slot]
+        if prev is not None:
+            self._m_itl.observe(now - prev)
+        self._last_tok[slot] = now
+        self._m_emit.inc()
 
     # -- the step ----------------------------------------------------------
 
     def step(self) -> Tuple[StepPlan, List[Tuple[int, np.ndarray]]]:
         """Run one engine step; returns (plan, finished) where finished is
         a list of (req_id, generated token ids)."""
-        with self._in_ctx():
-            return self._step_impl()
+        t0 = time.perf_counter()
+        with self._in_ctx(), obs_trace.span("engine/step",
+                                            registry=self.obs):
+            plan, finished = self._step_impl()
+        dt = time.perf_counter() - t0
+        self._m_step.observe(dt)
+        if plan.n_tokens and dt > 0:
+            self._m_tps.set(plan.n_tokens / dt)
+        self._m_queue.set(len(self.sched.waiting))
+        self._m_slots.set(sum(s is not None for s in self.sched.active))
+        total = self.config.total_pages
+        used = total - self.sched._free
+        self._m_occ.set(used / total)
+        self._m_pages_hw.set_max(used)
+        return plan, finished
 
     def _step_impl(self) -> Tuple[StepPlan, List[Tuple[int, np.ndarray]]]:
         cfg = self.config
@@ -268,8 +350,13 @@ class ServingEngine:
         for slot in plan.admitted:
             self.cache = self.model.stack.reset_slot_state(self.cache,
                                                            slot)
+            self._last_tok[slot] = None
 
         slots = cfg.max_slots
+        if plan.prefill_groups:
+            n_pf = sum(len(toks) for group in plan.prefill_groups
+                       for _, _, toks in group)
+            self._m_tok.inc(n_pf, phase="prefill")
         for group in plan.prefill_groups:
             # equal-length chunks from different sequences packed into
             # ONE batched call (rows are slot-indexed; slots without a
@@ -284,10 +371,13 @@ class ServingEngine:
                 tokens[slot, :len(toks)] = toks
                 pos[slot] = start
                 n_new[slot] = len(toks)
-            logits, self.cache = self._step(
-                self.params, self.cache, self.sched.state.page_table,
-                jnp.asarray(tokens), jnp.asarray(pos),
-                jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+            with obs_trace.span("engine/prefill", registry=self.obs,
+                                chunk=c, rows=len(group)):
+                logits, self.cache = self._step(
+                    self.params, self.cache, self.sched.state.page_table,
+                    jnp.asarray(tokens), jnp.asarray(pos),
+                    jnp.asarray(n_new),
+                    jnp.arange(slots, dtype=jnp.int32))
             for slot, start, toks in group:
                 self.sched.advance_prefill(slot, len(toks))
                 seq = self.sched.active[slot]
@@ -301,6 +391,8 @@ class ServingEngine:
 
         kmax = max((len(plan.drafts.get(s, ()))
                     for s in plan.decode_slots), default=0)
+        if plan.decode_slots:
+            self._m_tok.inc(len(plan.decode_slots), phase="decode")
         if plan.decode_slots and kmax == 0:
             # plain decode (C == 1): the PR-3 baseline path, bit-for-bit
             tokens = np.zeros((slots, 1), np.int32)
@@ -308,10 +400,13 @@ class ServingEngine:
             for s in plan.decode_slots:
                 tokens[s, 0] = self.sched.active[s].pending_token
                 n_new[s] = 1
-            logits, self.cache = self._step(
-                self.params, self.cache, self.sched.state.page_table,
-                jnp.asarray(tokens), self.sched.state.seq_lens,
-                jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+            with obs_trace.span("engine/decode", registry=self.obs,
+                                rows=len(plan.decode_slots)):
+                logits, self.cache = self._step(
+                    self.params, self.cache, self.sched.state.page_table,
+                    jnp.asarray(tokens), self.sched.state.seq_lens,
+                    jnp.asarray(n_new),
+                    jnp.arange(slots, dtype=jnp.int32))
             greedy_toks = np.asarray(
                 jnp.argmax(logits[:, 0, :], axis=-1)) \
                 if cfg.greedy else None
@@ -331,6 +426,8 @@ class ServingEngine:
                 req, gen = self.sched.finish(s)
                 self.outputs[req.req_id] = gen
                 self._t_added.pop(req.req_id, None)
+                self._last_tok[s] = None
+                self._m_req.inc(event="finished")
                 finished.append((req.req_id, gen))
         return plan, finished
 
@@ -347,15 +444,22 @@ class ServingEngine:
         c = 1 + self.spec_k
         tokens = np.zeros((slots, c), np.int32)
         n_new = np.zeros((slots,), np.int32)
+        n_prop = 0
         for s in plan.decode_slots:
             row = [self.sched.active[s].pending_token] \
                 + plan.drafts.get(s, [])
             tokens[s, :len(row)] = row
             n_new[s] = len(row)
-        logits, self.cache = self._verify(
-            self.params, self.cache, self.sched.state.page_table,
-            jnp.asarray(tokens), self.sched.state.seq_lens,
-            jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
+            n_prop += len(row) - 1
+        if n_prop:
+            self._m_spec.inc(n_prop, result="proposed")
+            self._m_tok.inc(n_prop, phase="spec_draft")
+        with obs_trace.span("engine/verify", registry=self.obs,
+                            rows=len(plan.decode_slots), chunk=c):
+            logits, self.cache = self._verify(
+                self.params, self.cache, self.sched.state.page_table,
+                jnp.asarray(tokens), self.sched.state.seq_lens,
+                jnp.asarray(n_new), jnp.arange(slots, dtype=jnp.int32))
         greedy = np.asarray(jnp.argmax(logits, axis=-1))    # (slots, C)
         for s in plan.decode_slots:
             drafts = plan.drafts.get(s, [])
@@ -363,6 +467,10 @@ class ServingEngine:
             m = 0
             while m < len(drafts) and drafts[m] == int(g[m]):
                 m += 1
+            if m:
+                self._m_spec.inc(m, result="accepted")
+            if len(drafts) - m:
+                self._m_spec.inc(len(drafts) - m, result="rolled_back")
             # committed: the pending token + m accepted drafts; emitted:
             # their greedy continuations g[0..m] (g[m] is the bonus token
             # from the last accepted position — it becomes the new
@@ -399,6 +507,6 @@ class ServingEngine:
                     "scheduler produced an empty plan with work pending — "
                     "page pool too small for any resident sequence")
         # pop: a long-lived engine must not hold every generation forever
-        # (``ttft`` is per-run telemetry — callers that aggregate across
-        # runs read it between ``run()`` calls and may clear it)
+        # (latency telemetry lives in the obs registry histograms, which
+        # are fixed-size — nothing here grows with request count)
         return [self.outputs.pop(i) for i in ids]

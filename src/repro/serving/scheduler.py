@@ -37,6 +37,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
 from . import kv_cache
 from .kv_cache import PageState
 
@@ -138,7 +139,8 @@ class Scheduler:
                  prefill_chunk: int, window: Optional[int] = None,
                  spec_k: int = 0,
                  drafter: Optional[Callable[[Sequence[int], int],
-                                            List[int]]] = None):
+                                            List[int]]] = None,
+                 obs: Optional[obs_metrics.Registry] = None):
         if prefill_chunk < 1 or token_budget < 1:
             raise ValueError("prefill_chunk and token_budget must be >= 1")
         if window is not None and window < 1:
@@ -178,6 +180,21 @@ class Scheduler:
         self._n_pages = [0] * slots
         self._seq_lens = [0] * slots
         self._first_page = [0] * slots
+        # obs: per-phase plan composition + allocator pressure. Recording
+        # is host-side (this whole class is host-side); a disabled
+        # registry makes every record a no-op.
+        self.obs = obs if obs is not None else obs_metrics.disabled_registry()
+        self._m_plan = self.obs.counter(
+            "sched_plan_tokens_total",
+            "tokens of work scheduled per phase (decode/prefill/draft)")
+        self._m_events = self.obs.counter(
+            "sched_events_total",
+            "scheduler lifecycle events (admitted/preempted/finished/"
+            "reclaimed_pages)")
+        self._m_free = self.obs.gauge(
+            "sched_free_pages", "free pages in the KV pool after planning")
+        self._m_waiting = self.obs.gauge(
+            "sched_waiting_requests", "requests queued but not resident")
 
     # -- bookkeeping the engine reports back ------------------------------
 
@@ -259,6 +276,7 @@ class Scheduler:
         self._n_pages[slot] -= n
         self._free += n
         self.stats["reclaimed_pages"] += n
+        self._m_events.inc(n, event="reclaimed_pages")
 
     def finish(self, slot: int) -> Tuple[Request, np.ndarray]:
         """Release the slot; returns (request, generated token ids)."""
@@ -267,6 +285,7 @@ class Scheduler:
         self._release_mirror(slot)
         self.active[slot] = None
         self.stats["finished"] += 1
+        self._m_events.inc(event="finished")
         out = np.asarray(seq.tokens[seq.req.orig_prompt_len:], np.int32)
         return seq.req, out
 
@@ -409,6 +428,15 @@ class Scheduler:
             protected.add(slot)
             budget -= chunk
 
+        self._m_plan.inc(len(plan.decode_slots), phase="decode")
+        self._m_plan.inc(sum(len(c) for _, _, c in plan.prefills),
+                         phase="prefill")
+        self._m_plan.inc(sum(len(d) for d in plan.drafts.values()),
+                         phase="draft")
+        self._m_events.inc(len(plan.admitted), event="admitted")
+        self._m_events.inc(len(plan.preempted), event="preempted")
+        self._m_free.set(self._free)
+        self._m_waiting.set(len(self.waiting))
         return plan
 
     def _propose_drafts(self, slot: int, budget: int) -> List[int]:

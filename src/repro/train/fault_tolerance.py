@@ -28,6 +28,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import metrics as obs_metrics
+
 
 @dataclasses.dataclass
 class HostState:
@@ -37,23 +39,38 @@ class HostState:
 
 class HeartbeatMonitor:
     def __init__(self, hosts: List[str], timeout_s: float = 60.0,
-                 straggler_steps: int = 3):
+                 straggler_steps: int = 3,
+                 registry: Optional[obs_metrics.Registry] = None):
         self.timeout = timeout_s
         self.straggler_steps = straggler_steps
         now = time.monotonic()
         self.hosts: Dict[str, HostState] = {
             h: HostState(last_seen=now) for h in hosts}
+        self.obs = registry if registry is not None \
+            else obs_metrics.get_registry()
+        self._m_age = self.obs.gauge(
+            "ft_heartbeat_age_seconds",
+            "seconds since each host's last heartbeat")
+        self._m_dead = self.obs.gauge(
+            "ft_dead_hosts", "hosts past the heartbeat timeout")
+        self._m_strag = self.obs.gauge(
+            "ft_stragglers", "live hosts lagging the lead step")
 
     def beat(self, host: str, step: int, now: Optional[float] = None):
         now = time.monotonic() if now is None else now
         st = self.hosts[host]
         st.last_seen = now
         st.step = step
+        self._m_age.set(0.0, host=host)
 
     def dead(self, now: Optional[float] = None) -> List[str]:
         now = time.monotonic() if now is None else now
-        return [h for h, st in self.hosts.items()
-                if now - st.last_seen > self.timeout]
+        for h, st in self.hosts.items():
+            self._m_age.set(max(now - st.last_seen, 0.0), host=h)
+        d = [h for h, st in self.hosts.items()
+             if now - st.last_seen > self.timeout]
+        self._m_dead.set(len(d))
+        return d
 
     def stragglers(self, now: Optional[float] = None) -> List[str]:
         """Live hosts whose step lags the lead by the threshold. Dead
@@ -66,8 +83,10 @@ class HeartbeatMonitor:
         if not alive:
             return []
         lead = max(self.hosts[h].step for h in alive)
-        return [h for h in alive
-                if lead - self.hosts[h].step >= self.straggler_steps]
+        lag = [h for h in alive
+               if lead - self.hosts[h].step >= self.straggler_steps]
+        self._m_strag.set(len(lag))
+        return lag
 
     def healthy(self, now: Optional[float] = None) -> List[str]:
         d = set(self.dead(now))
@@ -107,12 +126,19 @@ class RestartLoop:
     """Checkpoint-restart driver with failure injection hooks (tests)."""
 
     def __init__(self, policy: RestartPolicy, save_fn: Callable[[int], None],
-                 restore_fn: Callable[[], int]):
+                 restore_fn: Callable[[], int],
+                 registry: Optional[obs_metrics.Registry] = None):
         self.policy = policy
         self.save_fn = save_fn
         self.restore_fn = restore_fn
         self.failures = 0
         self.restarts = 0
+        self.obs = registry if registry is not None \
+            else obs_metrics.get_registry()
+        self._m_restarts = self.obs.counter(
+            "ft_restarts_total", "checkpoint-restore restarts taken")
+        self._m_failures = self.obs.counter(
+            "ft_failures_total", "step failures caught by the loop")
 
     def run(self, step_fn: Callable[[int], None], total_steps: int) -> int:
         """Runs step_fn(step) for steps [resume..total); returns steps run."""
@@ -137,6 +163,8 @@ class RestartLoop:
             except RuntimeError:
                 self.failures += 1
                 self.restarts += 1
+                self._m_failures.inc()
+                self._m_restarts.inc()
                 if self.failures > self.policy.max_failures:
                     raise
                 if self.policy.backoff_s:

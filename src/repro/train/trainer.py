@@ -35,10 +35,21 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..nn.common import mesh_context
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..optim import adam
 from ..optim.compression import psum_compressed_tree
 from ..sharding import policy
 from .checkpoint import CheckpointManager
+
+
+def _batch_tokens(batch: dict) -> int:
+    """Tokens a batch feeds the model (batch x seq), for throughput."""
+    for k in ("labels", "tokens"):
+        if k in batch:
+            return int(np.prod(batch[k].shape))
+    leaf = next(iter(batch.values()))
+    return int(np.prod(leaf.shape[:2]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,15 +63,38 @@ class TrainerConfig:
     checkpoint_every: int = 100
     checkpoint_keep: int = 3
     log_every: int = 10
+    # observability: ``metrics`` routes per-step timing/loss/grad-norm
+    # through the process obs registry (recording is host-side only — the
+    # jitted step is identical either way). ``profile_dir`` captures a
+    # jax.profiler trace of the whole fit() into that directory.
+    metrics: bool = True
+    profile_dir: Optional[str] = None
 
 
 class Trainer:
     def __init__(self, model, cfg: TrainerConfig,
                  mesh: Optional[Mesh] = None,
-                 rules: Optional[dict] = None):
+                 rules: Optional[dict] = None,
+                 registry: Optional[obs_metrics.Registry] = None):
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
+        self.obs = obs_metrics.resolve(registry, enabled=cfg.metrics)
+        self._m_steps = self.obs.counter(
+            "train_steps_total", "optimizer steps taken")
+        self._m_tokens = self.obs.counter(
+            "train_tokens_total", "tokens consumed (batch * seq)")
+        self._m_step_s = self.obs.histogram(
+            "train_step_seconds",
+            "per-step wall clock (first step includes compile)")
+        self._m_loss = self.obs.gauge("train_loss", "last logged loss")
+        self._m_gnorm = self.obs.gauge(
+            "train_grad_norm", "last logged global gradient norm")
+        self._m_tps = self.obs.gauge(
+            "train_tokens_per_s",
+            "throughput over the last log window")
+        self._m_micro = self.obs.gauge(
+            "train_microbatches", "grad-accum microbatches per step")
         self.rules = rules or (
             policy.rules_for("train", 0, mesh,
                              getattr(model, "cfg", None)) if mesh else {})
@@ -213,27 +247,60 @@ class Trainer:
         dstate = self.make_diloco_state(params) \
             if cfg.diloco_period else None
         history = []
+        self._m_micro.set(cfg.grad_accum)
+        win_t0 = time.perf_counter()
+        win_tokens = 0
         ctx = mesh_context(self.mesh, self.rules) if self.mesh else None
         if ctx:
             ctx.__enter__()
         try:
-            for step in range(start, steps):
-                batch = next(data_iter)
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                fn = self.step_fn(batch)
-                params, opt, metrics = fn(params, opt, batch)
-                if cfg.diloco_period and (step + 1) % cfg.diloco_period == 0:
-                    params, dstate = self.diloco_sync(
-                        params, dstate,
-                        "pod" if (self.mesh and "pod" in
-                                  self.mesh.axis_names) else None)
-                if (step + 1) % cfg.log_every == 0 or step == steps - 1:
-                    m = {k: float(v) for k, v in metrics.items()}
-                    history.append({"step": step + 1, **m})
-                    if on_step:
-                        on_step(step + 1, m)
-                if self.ckpt and (step + 1) % cfg.checkpoint_every == 0:
-                    self.ckpt.save(step + 1, (params, opt), async_=True)
+            with obs_trace.profile_trace(cfg.profile_dir):
+                for step in range(start, steps):
+                    batch = next(data_iter)
+                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                    fn = self.step_fn(batch)
+                    t0 = time.perf_counter()
+                    with obs_trace.span("train/step", registry=self.obs):
+                        params, opt, metrics = fn(params, opt, batch)
+                    # dispatch wall-clock: under async dispatch this
+                    # converges to true step time once the queue fills
+                    self._m_step_s.observe(time.perf_counter() - t0)
+                    n_tok = _batch_tokens(batch)
+                    win_tokens += n_tok
+                    self._m_steps.inc()
+                    self._m_tokens.inc(n_tok)
+                    if cfg.diloco_period \
+                            and (step + 1) % cfg.diloco_period == 0:
+                        params, dstate = self.diloco_sync(
+                            params, dstate,
+                            "pod" if (self.mesh and "pod" in
+                                      self.mesh.axis_names) else None)
+                    if (step + 1) % cfg.log_every == 0 \
+                            or step == steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        # float() above synced the device, so the window
+                        # clock now covers real compute, not just dispatch
+                        now = time.perf_counter()
+                        tps = win_tokens / max(now - win_t0, 1e-9)
+                        win_t0, win_tokens = now, 0
+                        m["tokens_per_s"] = tps
+                        self._m_loss.set(m.get("loss", float("nan")))
+                        if "grad_norm" in m:
+                            self._m_gnorm.set(m["grad_norm"])
+                        self._m_tps.set(tps)
+                        history.append({"step": step + 1, **m})
+                        if on_step:
+                            on_step(step + 1, m)
+                        else:
+                            print(f"step {step + 1:>6d}  "
+                                  f"loss {m.get('loss', float('nan')):.4f}  "
+                                  f"tok/s {tps:,.0f}  "
+                                  f"grad_norm "
+                                  f"{m.get('grad_norm', float('nan')):.3f}")
+                    if self.ckpt \
+                            and (step + 1) % cfg.checkpoint_every == 0:
+                        self.ckpt.save(step + 1, (params, opt),
+                                       async_=True)
             if self.ckpt:
                 self.ckpt.save(steps, (params, opt))
                 self.ckpt.wait()

@@ -986,3 +986,86 @@ def test_serving_smoke_mixed_requests():
     eng.sched.check_invariants()
     assert eng.sched.stats["finished"] == 4
     assert eng.sched.state.free() == 24  # all pages returned
+
+
+# ---------------------------------------------------------------------------
+# observability: engine counters + bounded host state (the PR-7 ttft leak)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_obs_counters_consistent():
+    """Engine metrics agree with the run's ground truth: emitted tokens ==
+    sum of output lengths, request lifecycle balances, spec proposed ==
+    accepted + rolled_back, TTFT histogram has one sample per request,
+    and page occupancy stays a fraction."""
+    from repro.obs.metrics import Registry
+    cfg = _tiny_cfg(sparse=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(31)
+    reg = Registry()
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=4, page_size=4, total_pages=24, max_pages_per_seq=8,
+        token_budget=16, prefill_chunk=8, backend="xla", spec_k=4),
+        registry=reg)
+    prompts = [np.full(6 + i, (11 * i + 3) % cfg.vocab_size, np.int32)
+               for i in range(4)]
+    outs = eng.run(prompts, 10)
+
+    emitted = reg.counter("serving_emitted_tokens_total").value()
+    assert emitted == sum(len(o) for o in outs) == 40
+    req = reg.counter("serving_requests_total")
+    assert req.value(event="added") == 4
+    assert req.value(event="finished") == 4
+    cnt, _ = reg.histogram("serving_ttft_seconds").stats()
+    assert cnt == 4                       # exactly one TTFT per request
+    icnt, _ = reg.histogram("serving_itl_seconds").stats()
+    assert icnt > 0
+    spec = reg.counter("serving_spec_tokens_total")
+    drafted = spec.value(result="proposed")
+    assert drafted > 0
+    assert drafted == spec.value(result="accepted") \
+        + spec.value(result="rolled_back")
+    # the engine's phase counter and the scheduler's plan counter count
+    # the same drafts independently
+    assert reg.counter("serving_tokens_total").value(
+        phase="spec_draft") == drafted
+    assert reg.counter("sched_plan_tokens_total").value(
+        phase="draft") == drafted
+    assert drafted == eng.sched.stats["spec_drafted"]
+    assert 0.0 <= reg.gauge("serving_page_occupancy").value() <= 1.0
+    assert reg.gauge("serving_pages_highwater").value() > 0
+    scnt, ssum = reg.histogram("serving_step_seconds").stats()
+    assert scnt == eng.sched.stats["steps"] and ssum > 0
+
+
+def test_engine_host_state_bounded_over_many_requests():
+    """Regression for the PR-7 leak: per-request host dicts must not grow
+    with completed requests. Run several waves through one engine and
+    assert the timestamp map drains and registry cardinality is flat."""
+    from repro.obs.metrics import Registry
+    cfg = _tiny_cfg(sparse=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(33)
+    reg = Registry()
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=2, page_size=4, total_pages=16, max_pages_per_seq=4,
+        token_budget=12, prefill_chunk=8, backend="xla"), registry=reg)
+    series_after_wave = []
+    for wave in range(3):
+        prompts = [rng.integers(0, cfg.vocab_size, 3 + (i + wave) % 4
+                                ).astype(np.int32) for i in range(6)]
+        eng.run(prompts, 4)
+        assert eng._t_added == {}, "admission timestamps must drain"
+        assert all(t is None for t in eng._last_tok)
+        h = reg.histogram("serving_ttft_seconds")
+        series_after_wave.append(
+            (len(h.series),
+             len(reg.counter("serving_requests_total").series)))
+    # 18 requests later: per-metric series counts did not grow past wave 1
+    assert series_after_wave[0] == series_after_wave[-1]
+    cnt, _ = reg.histogram("serving_ttft_seconds").stats()
+    assert cnt == 18
+    # outputs were popped by run(); nothing references finished requests
+    assert eng.outputs == {}
