@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_block_pattern
+from repro.core.quant import quantize_slab
 from repro.kernels import ops
 
 from .common import emit, time_call
@@ -119,6 +120,12 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
         jax.random.key(5), (bp_dec.n_rb, bp_dec.d_in_b, 128, 128)) * 0.02
     f_dec = jax.jit(lambda x, w: ops.csd_matmul(x, w, bp_dec,
                                                 backend="xla"))
+    # int8 decode rows (PR 9): decode is bandwidth-bound, so the 4x
+    # smaller slab is where weight quantization pays — time the fused
+    # dequant path right next to the f32 rows at the same skinny M
+    q_dec, s_dec = quantize_slab(w_dec)
+    f_q = jax.jit(lambda x, w, s: ops.csd_matmul(x, w, bp_dec,
+                                                 backend="xla", w_scale=s))
     for m_dec in (1, 2, 4, 8):
         xm = jax.random.normal(jax.random.key(6), (m_dec, n_in))
         t_dm = time_call(dense, xm, wd, name=f"decode_dense_m{m_dec}")
@@ -126,6 +133,10 @@ def run(n_in: int = 1024, n_out: int = 4096, m: int = 512):
                          name=f"decode_csd_m{m_dec}")
         emit(f"kernel/csd_decode_m{m_dec}_rho0.25", t_sm,
              f"dense_us={t_dm:.2f};speedup_vs_dense={t_dm / t_sm:.2f}x")
+        t_qm = time_call(f_q, xm, q_dec, s_dec,
+                         name=f"decode_csd_m{m_dec}_int8")
+        emit(f"kernel/csd_decode_m{m_dec}_rho0.25_int8", t_qm,
+             f"f32_us={t_sm:.2f};speedup_vs_f32={t_sm / t_qm:.2f}x")
 
     # training-step complexity scales with density (paper's core claim)
     def step_flops(rho):

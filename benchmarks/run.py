@@ -3,20 +3,37 @@
 ``PYTHONPATH=src python -m benchmarks.run``            quick set (~10 min CPU)
 ``PYTHONPATH=src python -m benchmarks.run --full``     full Table II ladder
 ``PYTHONPATH=src python -m benchmarks.run --only table2,fig12``
+``PYTHONPATH=src python -m benchmarks.run --quick``    kernel + serving only,
+                                                       writes BENCH_PR9.json
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+``--quick`` additionally writes the rows to ``BENCH_PR9.json`` at the repo
+top level (CI uploads it): one object per row with a ``dtype`` column
+("int8" for the quantized-junction / quantized-engine rows, "float32"
+otherwise) so the int8 decode-regime wins sit next to their full-width
+baselines in one artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 
+def _row_dtype(name: str) -> str:
+    return "int8" if name.endswith("_int8") or "_int8_" in name \
+        else "float32"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="kernel + serving benches only; write "
+                         "BENCH_PR9.json at the repo top level")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     ap.add_argument("--epochs", type=int, default=None)
@@ -27,7 +44,6 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices:
-        import os
         # append: an exported XLA_FLAGS must not silently veto the forcing
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") +
@@ -58,9 +74,13 @@ def main() -> None:
     }
     # the sharded rows only mean something on a multi-device view — run
     # them by default when --devices forces one, on request otherwise
-    selected = (args.only.split(",") if args.only else
-                [b for b in benches
-                 if b != "kernel_sharded" or args.devices])
+    if args.only:
+        selected = args.only.split(",")
+    elif args.quick:
+        selected = ["kernel", "serving"]
+    else:
+        selected = [b for b in benches
+                    if b != "kernel_sharded" or args.devices]
 
     print("name,us_per_call,derived")
     failures = []
@@ -72,6 +92,20 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failures.append((name, repr(e)))
+
+    if args.quick:
+        from .common import ROWS
+        rows = []
+        for r in ROWS:
+            name, us, derived = r.split(",", 2)
+            rows.append({"name": name, "us_per_call": us,
+                         "derived": derived, "dtype": _row_dtype(name)})
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_PR9.json")
+        with open(path, "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print(f"wrote {os.path.normpath(path)} ({len(rows)} rows)")
+
     if failures:
         print("FAILURES:", failures, file=sys.stderr)
         raise SystemExit(1)

@@ -22,6 +22,7 @@ SL202  large non-donated input buffer in a step executable
 SL203  unintended wide-dtype promotion (float64/complex128) in a hot path
 SL204  large closure-captured constant baked into the traced program
 SL205  shard_map body lacks the collective its out-spec replication implies
+SL206  whole int8 slab / KV pool upcast to full width inside a hot path
 SL301  duplicate edge: one left block feeds the same right block twice
 SL302  coverage hole: a left/right block with no surviving edges
 SL303  scatter form (out_idx/out_slot/out_valid) disagrees with gather form

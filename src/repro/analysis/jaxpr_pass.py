@@ -31,6 +31,14 @@ Checks:
   body. With ``check_vma=False`` (which the sharded junctions need), jax
   does NOT verify this — a missing ``psum`` yields per-device partial
   sums silently passed off as the full result (the PR-4 bug class).
+* **SL206** — quantization-defeating upcast: a ``convert_element_type``
+  whose int8 input is a *whole* registered slab / KV page pool (exact
+  shape match against the traced step's int8 inputs, plus their
+  shard-local variants). Dequantizing the full tensor up front
+  materializes an f32 copy in HBM and erases the 4x bandwidth win the
+  int8 path exists for; healthy paths convert only per-slot / per-page
+  tiles (rank-3 slices in the XLA fallback, in-register tiles in the
+  Pallas kernels), which never match a full-slab shape.
 """
 from __future__ import annotations
 
@@ -149,6 +157,55 @@ def lint_closed_jaxpr(closed, subject: str,
         # SL205: shard_map missing-collective
         if name == "shard_map":
             f.extend(_lint_shard_map(eqn, subject))
+    return f
+
+
+def _int8_slab_shapes(closed, mesh) -> Set[Tuple[int, ...]]:
+    """Shapes of whole int8 slabs / KV page pools entering the traced
+    program (int8 inputs of rank >= 4), plus their shard-local variants:
+    under the junction/cache shard_map the leading block-row (or expert /
+    page) dim arrives divided by the model-axis size."""
+    shapes: Set[Tuple[int, ...]] = set()
+    n = int(mesh.shape["model"]) if mesh is not None \
+        and "model" in mesh.axis_names else 1
+    for var in closed.jaxpr.invars:
+        aval = getattr(var, "aval", None)
+        if aval is None or str(getattr(aval, "dtype", "")) != "int8" \
+                or len(getattr(aval, "shape", ())) < 4:
+            continue
+        shapes.add(tuple(aval.shape))
+        if n > 1:
+            for d in (0, 1):
+                if aval.shape[d] % n == 0:
+                    local = list(aval.shape)
+                    local[d] //= n
+                    shapes.add(tuple(local))
+    return shapes
+
+
+def _lint_quant(closed, subject: str, mesh) -> List[Finding]:
+    """SL206 over one traced program (no-op when it has no int8 slabs)."""
+    slab_shapes = _int8_slab_shapes(closed, mesh)
+    f: List[Finding] = []
+    if not slab_shapes:
+        return f
+    seen: Set[Tuple[int, ...]] = set()
+    for eqn in _iter_eqns(closed.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        aval = getattr(eqn.invars[0], "aval", None)
+        if aval is None or str(getattr(aval, "dtype", "")) != "int8":
+            continue
+        shp = tuple(getattr(aval, "shape", ()))
+        if shp in slab_shapes and shp not in seen:
+            seen.add(shp)
+            f.append(Finding(
+                "SL206", subject,
+                f"whole int8 slab {shp} upcast to "
+                f"{eqn.params.get('new_dtype')} — a full-width copy of "
+                "the quantized tensor enters HBM traffic, erasing the "
+                "int8 bandwidth win; dequantize per-slot/per-page inside "
+                "the junction instead", {"shape": shp}))
     return f
 
 
@@ -370,10 +427,90 @@ def _trace_verify(name: str, mesh) -> Optional[Tuple[Any, Any, str]]:
     return traced, args, f"spec_verify[{name}]"
 
 
+def _trace_quant(name: str, mesh) -> Optional[Tuple[Any, Any, str]]:
+    """Trace the *quantized* serving step: params through
+    ``quantize_tree`` (int8 slabs + per-block scales) and the paged cache
+    built with ``quant_kv=True`` (int8 pages + per-token scales). The
+    trace proves the executable the int8 engine actually runs keeps the
+    slabs quantized end to end (SL206) on top of the standard SL20x
+    checks. None for configs whose smoke variant has no block-sparse
+    junction to quantize — there would be nothing int8 in the program."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..core.quant import quantize_tree
+    from ..nn.common import dtype_of, mesh_context
+    from ..nn.model import build_model
+    from ..sharding import policy
+
+    cfg = get_config(name, smoke=True)
+    if cfg.input_mode != "tokens" or cfg.enc_dec is not None:
+        return None
+    model = build_model(cfg)
+    spec = model.spec()
+    p_avals = jax.eval_shape(model.init, jax.random.key(0))
+    q_avals = jax.eval_shape(lambda p: quantize_tree(p, spec)[0], p_avals)
+    if not any(l.dtype == jnp.int8 for l in jax.tree.leaves(q_avals)):
+        return None
+    slots, pages, page_size, max_pages = 2, 8, 16, 4
+    cache_avals = jax.eval_shape(
+        lambda: model.stack.init_paged_cache(slots, pages, page_size,
+                                             dtype_of(cfg), quant_kv=True))
+    i32 = np.int32
+
+    def raw_step(params, cache, page_table, tokens, pos, n_new, slot_ids):
+        return model.paged_step(params, tokens, pos, n_new, cache,
+                                page_table, slot_ids, backend="auto",
+                                interpret=True)
+
+    step = jax.jit(raw_step, donate_argnums=(1,))
+    args = (q_avals, cache_avals,
+            jax.ShapeDtypeStruct((slots, max_pages), i32),
+            jax.ShapeDtypeStruct((slots, 1), i32),
+            jax.ShapeDtypeStruct((slots,), i32),
+            jax.ShapeDtypeStruct((slots,), i32),
+            jax.ShapeDtypeStruct((slots,), i32))
+    if mesh is not None:
+        rules = policy.rules_for("decode", slots, mesh, cfg)
+        with mesh, mesh_context(mesh, rules):
+            traced = step.trace(*args)
+    else:
+        traced = step.trace(*args)
+    return traced, args, f"quant_step[{name}]"
+
+
+def _trace_quant_inject(mesh) -> Tuple[Any, Any, str]:
+    """Selftest subject: a deliberately quantization-defeating junction
+    that dequantizes the WHOLE int8 slab up front and feeds the f32 copy
+    to ``csd_matmul``. The full-slab ``convert_element_type`` this
+    produces MUST trip SL206 — CI runs it to prove the gate has teeth."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.block_pattern import make_block_pattern
+    from ..core.quant import dequantize_slab
+    from ..kernels import ops as kops
+
+    bp = make_block_pattern(64, 64, 0.5, block_in=16, block_out=16, seed=0)
+    x_aval = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    w_aval = jax.ShapeDtypeStruct(
+        (bp.n_rb, bp.d_in_b, 16, 16), jnp.int8)
+    s_aval = jax.ShapeDtypeStruct((bp.n_rb, bp.d_in_b), jnp.float32)
+
+    def bad(x, w, s):
+        return kops.csd_matmul(x, dequantize_slab(w, s), bp,
+                               backend="xla")
+
+    traced = jax.jit(bad).trace(x_aval, w_aval, s_aval)
+    return traced, (x_aval, w_aval, s_aval), "quant_inject[selftest]"
+
+
 def run(config_names: Optional[Sequence[str]] = None,
         mesh_shape: Tuple[int, int] = (2, 4),
         const_threshold: int = DEFAULT_CONST_THRESHOLD,
-        donate_threshold: int = DEFAULT_DONATE_THRESHOLD
+        donate_threshold: int = DEFAULT_DONATE_THRESHOLD,
+        inject: bool = False
         ) -> Tuple[List[Finding], List[str], List[str]]:
     """Lint the train and paged-serve steps of every registered config.
 
@@ -400,7 +537,8 @@ def run(config_names: Optional[Sequence[str]] = None,
     findings: List[Finding] = []
     covered: List[str] = []
     for name in (config_names or ARCHS):
-        for tracer in (_trace_train, _trace_paged, _trace_verify):
+        for tracer in (_trace_train, _trace_paged, _trace_verify,
+                       _trace_quant):
             try:
                 res = tracer(name, mesh)
             except Exception as e:
@@ -412,6 +550,7 @@ def run(config_names: Optional[Sequence[str]] = None,
             traced, in_avals, subject = res
             findings.extend(lint_closed_jaxpr(traced.jaxpr, subject,
                                               const_threshold))
+            findings.extend(_lint_quant(traced.jaxpr, subject, mesh))
             try:
                 text = traced.lower().as_text()
             except Exception as e:
@@ -419,5 +558,13 @@ def run(config_names: Optional[Sequence[str]] = None,
             else:
                 findings.extend(lint_donation(text, in_avals, subject,
                                               donate_threshold))
+            covered.append(subject)
+    if inject:
+        try:
+            traced, _, subject = _trace_quant_inject(mesh)
+        except Exception as e:
+            errors.append(f"_trace_quant_inject: {type(e).__name__}: {e}")
+        else:
+            findings.extend(_lint_quant(traced.jaxpr, subject, mesh))
             covered.append(subject)
     return findings, covered, errors

@@ -11,7 +11,8 @@ config, on CPU, with no TPU time:
 Exits non-zero on any unsuppressed finding or any pass error (a hot path
 the linter cannot trace is not a certified hot path). ``--selftest-inject``
 adds a deliberately race-broken copy of ``csd_spmm_fwd`` to the grid pass
-and must make the lint fail — CI runs it to prove the gate has teeth.
+and a whole-slab-dequantizing junction to the jaxpr pass (SL206), and must
+make the lint fail — CI runs it to prove the gate has teeth.
 
 The forced-host-device environment (``--devices``, default 8) is set up
 *before* jax is imported, which is why every pass imports jax lazily. When
@@ -86,7 +87,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         report.extend(f)
         report.covered["pattern"] = covered
     if "jaxpr" in passes:
-        f, covered, errors = jaxpr_pass.run(configs)
+        f, covered, errors = jaxpr_pass.run(configs,
+                                            inject=args.selftest_inject)
         report.extend(f)
         report.covered["jaxpr"] = covered
         report.errors.extend(errors)

@@ -7,6 +7,8 @@ Public API:
 * block-level lifting for TPU: ``make_block_pattern``, ``BlockPattern``
 * the junction module: ``SparseLinear``, ``SparseLinearSpec``
 * hardware storage model: ``storage_cost``, ``junction_cycles``
+* inference-path int8 slabs: ``QuantConfig``, ``quantize_slab``,
+  ``quantize_tree`` (per-block scales riding the slab layout)
 """
 from .sparsity import (  # noqa: F401
     JunctionSpec,
@@ -33,6 +35,10 @@ from .block_pattern import (  # noqa: F401
     BlockPattern, PartitionedPattern, can_partition, fit_block_pattern,
     make_block_pattern, merge_slab, partition_pattern, reassemble_outputs,
     split_slab,
+)
+from .quant import (  # noqa: F401
+    QuantConfig, dequantize_slab, quantize_slab, quantize_spec,
+    quantize_tree,
 )
 from .sparse_linear import (  # noqa: F401
     SparseLinear,

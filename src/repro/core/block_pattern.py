@@ -313,18 +313,21 @@ def split_slab(w, part: PartitionedPattern):
 
     4-D ``(n_rb, d_in_b, bL, bR)`` -> ``(n_shards, n_rb_loc, d_in_b, bL,
     bR)``; 5-D expert slabs ``(E, n_rb, ...)`` -> ``(n_shards, E,
-    n_rb_loc, ...)``. Works on numpy or jax arrays (pure take/reshape).
+    n_rb_loc, ...)``. The 2-D/3-D per-block *scale* arrays of a quantized
+    slab (``core.quant``: ``(n_rb, d_in_b)`` / ``(E, n_rb, d_in_b)``)
+    split the same way — they are slabs without the trailing block dims.
+    Works on numpy or jax arrays (pure take/reshape).
     """
     xp = _xp(w)
-    rb_axis = 0 if w.ndim == 4 else 1
+    rb_axis = 0 if w.ndim in (2, 4) else 1
     if w.shape[rb_axis] != len(part.perm):
         raise ValueError(f"slab block-row dim {w.shape[rb_axis]} != "
                          f"pattern n_rb {len(part.perm)}")
     wp = xp.take(w, part.perm, axis=rb_axis)
     q = part.n_rb_local
-    if w.ndim == 4:
+    if rb_axis == 0:
         return wp.reshape((part.n_shards, q) + w.shape[1:])
-    # (E, n_rb, d, bL, bR): shard-major leading dim so shards stay
+    # (E, n_rb, ...): shard-major leading dim so shards stay
     # addressable as ws[s]
     wp = wp.reshape((w.shape[0], part.n_shards, q) + w.shape[2:])
     return xp.moveaxis(wp, 1, 0)
@@ -334,10 +337,10 @@ def merge_slab(ws, part: PartitionedPattern):
     """Inverse of :func:`split_slab`: per-shard slabs back to the logical
     block-row order."""
     xp = _xp(ws)
-    if ws.ndim == 5:  # (k, n_rb_loc, d, bL, bR)
+    if ws.ndim in (3, 5):  # (k, n_rb_loc, ...) — 4-D slab or 2-D scales
         flat = ws.reshape((-1,) + ws.shape[2:])
         return xp.take(flat, part.inv_perm, axis=0)
-    # (k, E, n_rb_loc, d, bL, bR)
+    # (k, E, n_rb_loc, ...) — 5-D slab or 3-D scales
     sw = xp.moveaxis(ws, 0, 1)
     flat = sw.reshape((sw.shape[0], -1) + sw.shape[3:])
     return xp.take(flat, part.inv_perm, axis=1)
@@ -370,7 +373,8 @@ def shrink_to_divisor(dim: int, block: int) -> int:
 
 def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
                       seed: int = 0,
-                      debug: Optional[bool] = None
+                      debug: Optional[bool] = None,
+                      weight_dtype=None
                       ) -> Optional[BlockPattern]:
     """Adapt a ``SparsityConfig``'s block sizes to one junction, or return
     ``None`` if the junction should stay dense.
@@ -405,7 +409,15 @@ def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
                         f"fit_block_pattern({n_in}x{n_out}, rho={rho})")
     # export the junction's static complexity accounting (sparse/dense
     # MACs, storage, rho, speedup) as live gauges — every junction the
-    # model instantiates becomes observable at fit time
+    # model instantiates becomes observable at fit time. ``weight_dtype``
+    # is the slab's actual storage dtype (bf16 slabs are 2 B/elem, not
+    # 4); a quantized inference path (``sp.quant``) additionally exports
+    # the rho x bits/32 compression gauges.
     from ..obs import flops as _obs_flops
-    _obs_flops.register(bp)
+    wb = np.dtype(weight_dtype).itemsize if weight_dtype is not None else 4
+    qc = getattr(sp, "quant", None)
+    _obs_flops.register(bp, weight_bytes_per_elem=wb,
+                        quant_bits=getattr(qc, "bits", None)
+                        if qc is not None and getattr(qc, "weights", False)
+                        else None)
     return bp

@@ -1,0 +1,160 @@
+"""Per-block symmetric int8 quantization for block-sparse junction slabs.
+
+The paper's hardware runs reduced-precision fixed-point arithmetic; its
+FPGA companion (arXiv:1806.01087) and "Sparsely-Connected Neural
+Networks" (arXiv:1611.01427) both show low-bitwidth weights compose
+*multiplicatively* with pre-defined sparsity: storage drops by
+``rho x bits/32``. This module is the software half of that claim for
+the serving path — weights are quantized **once at engine load**, never
+during training (training stays full-width; see ``serving.engine``).
+
+Granularity is one scale per surviving (bL x bR) weight block — the unit
+the CSD-SpMM kernels stream — so the scale tile rides the same
+``(n_rb, d_in_b)``-indexed layout as the gather pattern:
+
+* 4-D slab ``(n_rb, d_in_b, bL, bR)``      -> scales ``(n_rb, d_in_b)``
+* 5-D slab ``(E, n_rb, d_in_b, bL, bR)``   -> scales ``(E, n_rb, d_in_b)``
+* scanned stacks prepend a layer dim to both.
+
+Because the scales carry the slab's leading dims, they split/merge under
+``core.block_pattern.split_slab``/``merge_slab`` (generalized to the
+2-D/3-D scale shapes) and shard under the same ``"slab"``/``"expert"``
+policy rules — the sharded junction path works unchanged.
+
+Quantization is symmetric (zero-preserving, range [-127, 127]) per
+block: ``scale = max|w_block| / 127``; elementwise error is bounded by
+``scale / 2``. Dequantization happens *in-kernel/in-register* (the int8
+slab is what enters HBM traffic — certified by sparselint SL206).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Inference-path quantization knobs (see README "Quantized junctions").
+
+    ``weights`` — quantize every block-sparse junction slab to int8 with
+    per-block scales; ``kv`` — quantize the paged KV cache pages to int8
+    with per-token scales written at append time; ``bits`` — weight/KV
+    bitwidth (only 8 is implemented; the field exists so the storage
+    gauges and README formula stay honest about the knob).
+    """
+
+    weights: bool = True
+    kv: bool = True
+    bits: int = 8
+
+    def __post_init__(self):
+        if self.bits != 8:
+            raise ValueError(f"only int8 quantization is implemented "
+                             f"(bits={self.bits})")
+
+
+def quantize_slab(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-block int8 quantization of a weight slab.
+
+    Works for any leading dims — the amax reduces over the trailing
+    (bL, bR) block dims only. Returns ``(q int8, scales f32)`` with
+    ``scales.shape == w.shape[:-2]``.
+    """
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=(-2, -1))
+    scales = jnp.maximum(amax, 1e-12) / _QMAX
+    q = jnp.clip(jnp.round(wf / scales[..., None, None]), -_QMAX, _QMAX)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_slab(q: jax.Array, scales: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_slab` (the test oracle — the kernels
+    never materialize this full-width slab; that is SL206's contract)."""
+    return (q.astype(jnp.float32) * scales[..., None, None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree quantization: walk params and model.spec() in parallel, turn
+# every sparse junction slab into (int8 slab, f32 "<name>_scale" sibling)
+# and extend the spec so the sharding policy places the scales next to
+# their slab chunks.
+# ---------------------------------------------------------------------------
+
+
+def _is_spec_leaf(s: Any) -> bool:
+    return isinstance(s, tuple) and all(
+        a is None or isinstance(a, str) for a in s)
+
+
+def _is_slab_spec(axes: Tuple[Optional[str], ...], ndim: int) -> bool:
+    """A param leaf is a junction slab iff its logical axes name the
+    block-row dim ``"slab"`` with 4 trailing slab dims, or the
+    expert-major dim ``"expert"`` with 5 (the batched slab). Scanned
+    stacks prepend ``"layers"`` and still match; dense expert weights
+    (``("expert", "embed", ...)``, 3-D) do not."""
+    if not isinstance(axes, tuple) or len(axes) != ndim:
+        return False
+    if "slab" in axes:
+        return ndim - axes.index("slab") == 4
+    if "expert" in axes:
+        return ndim - axes.index("expert") == 5
+    return False
+
+
+def _walk(p: Any, s: Any, fn):
+    """Parallel recursion over a params tree and its spec tree; ``fn(leaf,
+    axes)`` returns ``None`` (keep as-is) or a ``(q, scales)`` pair."""
+    if isinstance(p, dict):
+        qp: dict = {}
+        qs: dict = {}
+        for k, v in p.items():
+            sv = s[k]
+            if _is_spec_leaf(sv):
+                res = fn(v, sv)
+                if res is not None:
+                    qp[k], qp[k + "_scale"] = res
+                    qs[k], qs[k + "_scale"] = sv, sv[:-2]
+                else:
+                    qp[k], qs[k] = v, sv
+            else:
+                qp[k], qs[k] = _walk(v, sv, fn)
+        return qp, qs
+    if isinstance(p, (list, tuple)):
+        pairs = [_walk(a, b, fn) for a, b in zip(p, s)]
+        t = type(p)
+        return t(x[0] for x in pairs), t(x[1] for x in pairs)
+    return p, s
+
+
+def quantize_tree(params: Any, spec: Any) -> Tuple[Any, Any]:
+    """Quantize every sparse junction slab in a param tree.
+
+    Returns ``(new_params, new_spec)``: each slab leaf ``k`` becomes int8
+    with an f32 sibling ``k + "_scale"`` (spec = the slab's leading axes),
+    so the junction call sites (``nn.layers.Linear``, ``SparseLinear``,
+    ``MoE``) pick up the quantized path by key presence and the sharding
+    policy resolves the scale placement from the extended spec.
+    """
+    def fn(leaf, axes):
+        if _is_slab_spec(axes, getattr(leaf, "ndim", 0)):
+            return quantize_slab(leaf)
+        return None
+
+    return _walk(params, spec, fn)
+
+
+def quantize_spec(spec: Any, params: Any) -> Any:
+    """Spec-only half of :func:`quantize_tree` — usable with abstract
+    params (``ShapeDtypeStruct`` trees): only ``ndim`` is read."""
+    def fn(leaf, axes):
+        if _is_slab_spec(axes, getattr(leaf, "ndim", 0)):
+            return leaf, None  # placeholders; only the spec side is kept
+        return None
+
+    return _walk(params, spec, fn)[1]

@@ -156,6 +156,10 @@ class SparseLinear:
                 # entry (same wiring as nn.layers.Linear)
                 kw["lead_spec"] = tuple(logical_to_spec(
                     *(("batch",) + (None,) * (x.ndim - 2))))
+            if "w_scale" in params:
+                # int8 slab from quantize_slab/quantize_tree: pass it
+                # uncast with its per-block scales (inference only)
+                kw["w_scale"] = params["w_scale"]
             return kops.csd_matmul(
                 x, w, self.pattern, bias=b, activation=activation,
                 backend="auto",

@@ -177,6 +177,163 @@ def _fwd_kernel_batched(idx_ref, *refs, d_in_b: int,
             y_ref[0] = apply_activation(z, activation)
 
 
+# ---------------------------------------------------------------------------
+# Quantized forward (inference only): the slab enters the kernel as int8 and
+# is widened *in register* right before the MXU issue; the per-block f32
+# scale rides the scalar-prefetch channel (SMEM, next to the pattern — the
+# FPGA analogy: the fixed-point weight memory plus a tiny per-block exponent
+# ROM). The f32 accumulator is scaled per fan-in slot, so bias/activation in
+# the last-slot epilogue see fully dequantized values. HBM traffic for the
+# weights is 1 byte/element — certified by sparselint SL206: no
+# convert_element_type of the *whole* slab may appear outside the kernel.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel_quant(idx_ref, scale_ref, *refs, d_in_b: int,
+                      activation: Optional[str], has_bias: bool):
+    """refs: x, w(int8), [bias], y. Same schedule as ``_fwd_kernel``."""
+    if has_bias:
+        x_ref, w_ref, b_ref, y_ref = refs
+    else:
+        (x_ref, w_ref, y_ref), b_ref = refs, None
+    r = pl.program_id(1)
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]  # (block_m, bL)
+    w = w_ref[0, 0].astype(x.dtype)  # int8 -> compute dtype, in register
+    s = scale_ref[r, f]  # per-block f32 scale from SMEM
+    y_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=y_ref.dtype) * s
+
+    if has_bias or activation is not None:
+        @pl.when(f == d_in_b - 1)
+        def _epilogue():
+            z = y_ref[...]
+            if has_bias:
+                z = z + b_ref[...].astype(z.dtype)
+            y_ref[...] = apply_activation(z, activation)
+
+
+def _fwd_kernel_quant_batched(idx_ref, scale_ref, *refs, d_in_b: int,
+                              activation: Optional[str], has_bias: bool):
+    """Expert-major quantized forward; scales are (E, n_rb, d_in_b)."""
+    if has_bias:
+        x_ref, w_ref, b_ref, y_ref = refs
+    else:
+        (x_ref, w_ref, y_ref), b_ref = refs, None
+    e = pl.program_id(0)
+    r = pl.program_id(2)
+    f = pl.program_id(3)
+
+    @pl.when(f == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[0]  # (block_m, bL)
+    w = w_ref[0, 0, 0].astype(x.dtype)  # (bL, bR) int8 -> compute dtype
+    s = scale_ref[e, r, f]
+    y_ref[0] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=y_ref.dtype) * s
+
+    if has_bias or activation is not None:
+        @pl.when(f == d_in_b - 1)
+        def _epilogue():
+            z = y_ref[0]
+            if has_bias:
+                z = z + b_ref[0].astype(z.dtype)
+            y_ref[0] = apply_activation(z, activation)
+
+
+def _csd_spmm_fwd_quant(x, w, w_scale, block_idx, *, bias, activation,
+                        block_m, interpret):
+    """Unbatched quantized forward: w int8 (n_rb, d_in_b, bL, bR) with
+    scales (n_rb, d_in_b) f32; grid identical to the full-width path."""
+    m, n_in = x.shape
+    n_rb, d_in_b, bl, br = w.shape
+    if n_in % bl:
+        raise ValueError("n_in not divisible by block_in")
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+
+    has_bias = bias is not None
+    grid = (m // block_m, n_rb, d_in_b)
+    kernel = functools.partial(_fwd_kernel_quant, d_in_b=d_in_b,
+                               activation=activation, has_bias=has_bias)
+    in_specs = [
+        pl.BlockSpec((block_m, bl),
+                     lambda i, r, f, idx, sc: (i, idx[r, f])),
+        pl.BlockSpec((1, 1, bl, br),
+                     lambda i, r, f, idx, sc: (r, f, 0, 0)),
+    ]
+    operands = [jnp.asarray(block_idx, jnp.int32),
+                jnp.asarray(w_scale, jnp.float32), x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, br),
+                                     lambda i, r, f, idx, sc: (r, 0)))
+        operands.append(bias.reshape(n_rb, br))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_m, br),
+                                   lambda i, r, f, idx, sc: (i, r)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_rb * br), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out.astype(x.dtype)
+
+
+def _csd_spmm_fwd_quant_batched(x, w, w_scale, block_idx, *, bias,
+                                activation, block_m, interpret):
+    """Expert-batched quantized forward: w int8 (E, n_rb, d_in_b, bL, bR)
+    with scales (E, n_rb, d_in_b) f32."""
+    e, m, n_in = x.shape
+    _, n_rb, d_in_b, bl, br = w.shape
+    if n_in % bl:
+        raise ValueError("n_in not divisible by block_in")
+    if m % block_m:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+
+    has_bias = bias is not None
+    grid = (e, m // block_m, n_rb, d_in_b)
+    kernel = functools.partial(_fwd_kernel_quant_batched, d_in_b=d_in_b,
+                               activation=activation, has_bias=has_bias)
+    in_specs = [
+        pl.BlockSpec((1, block_m, bl),
+                     lambda e, i, r, f, idx, sc: (e, i, idx[r, f])),
+        pl.BlockSpec((1, 1, 1, bl, br),
+                     lambda e, i, r, f, idx, sc: (e, r, f, 0, 0)),
+    ]
+    operands = [jnp.asarray(block_idx, jnp.int32),
+                jnp.asarray(w_scale, jnp.float32), x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, 1, br),
+                                     lambda e, i, r, f, idx, sc: (e, r, 0)))
+        operands.append(bias.reshape(e, n_rb, br))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, block_m, br),
+                                   lambda e, i, r, f, idx, sc: (e, i, r)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, m, n_rb * br), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out.astype(x.dtype)
+
+
 def _csd_spmm_fwd_batched(x, w, block_idx, *, bias, activation, save_preact,
                           block_m, interpret):
     """Expert-batched forward: x (E, M, n_in), w (E, n_rb, d_in_b, bL, bR),
@@ -235,6 +392,7 @@ def csd_spmm_fwd(
     save_preact: bool = False,
     block_m: int = 128,
     interpret: bool = False,
+    w_scale: Optional[jax.Array] = None,
 ):
     """Forward block-sparse matmul with optional fused bias/activation.
 
@@ -249,9 +407,29 @@ def csd_spmm_fwd(
     ``save_preact=True`` additionally returns the pre-activation
     ``z = x @ W_sparse + bias`` (needed by the backward pass of non-masking
     activations like gelu); the return value is then ``(y, z)``.
+
+    ``w_scale`` selects the int8-quantized forward (inference only, no
+    VJP): ``w`` must be int8 with per-block scales ``(n_rb, d_in_b)``
+    (resp. ``(E, n_rb, d_in_b)``) from ``core.quant.quantize_slab``;
+    dequantization is folded into the accumulate before the epilogue.
     """
     if activation is not None and activation not in ACTIVATIONS:
         raise ValueError(f"unsupported fused activation {activation!r}")
+    if w_scale is not None:
+        if save_preact:
+            raise ValueError(
+                "save_preact is unsupported on the quantized path "
+                "(inference-only; training stays full-width)")
+        if w.dtype != jnp.int8:
+            raise ValueError(f"w_scale given but w.dtype={w.dtype}, "
+                             f"expected int8")
+        if w.ndim == 5:
+            return _csd_spmm_fwd_quant_batched(
+                x, w, w_scale, block_idx, bias=bias, activation=activation,
+                block_m=block_m, interpret=interpret)
+        return _csd_spmm_fwd_quant(
+            x, w, w_scale, block_idx, bias=bias, activation=activation,
+            block_m=block_m, interpret=interpret)
     if w.ndim == 5:
         return _csd_spmm_fwd_batched(
             x, w, block_idx, bias=bias, activation=activation,

@@ -149,10 +149,18 @@ def flash_attention(
 # ---------------------------------------------------------------------------
 
 
-def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, *, scale: float,
-                         window: Optional[int], softcap: Optional[float],
-                         page_size: int, n_pages: int):
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, window: Optional[int],
+                         softcap: Optional[float], page_size: int,
+                         n_pages: int, quant: bool = False):
+    """``quant`` selects int8 KV pages: two extra per-token scale refs
+    ((1, page_size) tiles of the scale buffers, selected by the same
+    page-table index map) dequantize K/V in register — the pages stream
+    from HBM at 1 byte/element."""
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        (o_ref, acc_ref, m_ref, l_ref), ks_ref, vs_ref = rest, None, None
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -164,6 +172,8 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32) * scale    # (G, Dh)
     k = k_ref[0, :, 0].astype(jnp.float32)         # (page, Dh)
+    if quant:
+        k = k * ks_ref[0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, page)
     if softcap is not None:
@@ -186,6 +196,8 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     l_new = corr * l_ref[:, :1] + jnp.sum(pexp, axis=1, keepdims=True)
 
     v = v_ref[0, :, 0].astype(jnp.float32)         # (page, Dh)
+    if quant:
+        v = v * vs_ref[0][:, None]
     pv = jax.lax.dot_general(pexp, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     acc_ref[...] = acc_ref[...] * corr + pv
@@ -200,25 +212,36 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def _paged_decode_pallas(q, k_pages, v_pages, page_table, lengths, *,
-                         window, softcap, scale, interpret):
+                         window, softcap, scale, interpret,
+                         k_scale=None, v_scale=None):
     b, hkv, g, dh = q.shape
     page_size = k_pages.shape[1]
     n_pages = page_table.shape[1]
+    quant = k_scale is not None
     # (P, page, Hkv, Dh) blocked as (1 page-row, page, 1 head, Dh); the
     # physical page id comes from the scalar-prefetched table — this is
     # the kernel-side form of the free-list indirection
     kv_spec = pl.BlockSpec(
         (1, page_size, 1, dh),
         lambda bb, h, p, pt, ln: (jnp.maximum(pt[bb, p], 0), 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dh),
+                     lambda bb, h, p, pt, ln: (bb, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [page_table, lengths, q, k_pages, v_pages]
+    if quant:
+        # per-token scale tile of the (P+1, page) buffers, same page id
+        sc_spec = pl.BlockSpec(
+            (1, page_size),
+            lambda bb, h, p, pt, ln: (jnp.maximum(pt[bb, p], 0), 0))
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh),
-                         lambda bb, h, p, pt, ln: (bb, h, 0, 0)),
-            kv_spec,
-            kv_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dh),
                                lambda bb, h, p, pt, ln: (bb, h, 0, 0)),
         scratch_shapes=[
@@ -229,24 +252,31 @@ def _paged_decode_pallas(q, k_pages, v_pages, page_table, lengths, *,
     )
     kernel = functools.partial(
         _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
-        page_size=page_size, n_pages=n_pages)
+        page_size=page_size, n_pages=n_pages, quant=quant)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
-    )(page_table, lengths, q, k_pages, v_pages)
+    )(*operands)
 
 
 def _paged_decode_xla(q, k_pages, v_pages, page_table, lengths, *,
-                      window, softcap, scale):
+                      window, softcap, scale, k_scale=None, v_scale=None):
     """Gather-based fallback: materialize each sequence's logical KV view
-    from its page table, then run the standard masked decode einsum."""
+    from its page table, then run the standard masked decode einsum.
+    With ``k_scale``/``v_scale`` (int8 pages) the gathered view is
+    dequantized per token before the einsum."""
     b, hkv, g, dh = q.shape
     page_size = k_pages.shape[1]
     idx = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
     k = k_pages[idx].reshape(b, -1, hkv, dh)     # (B, S, Hkv, Dh)
     v = v_pages[idx].reshape(b, -1, hkv, dh)
+    if k_scale is not None:
+        ks = k_scale[idx].reshape(b, -1)
+        vs = v_scale[idx].reshape(b, -1)
+        k = k.astype(jnp.float32) * ks[:, :, None, None]
+        v = v.astype(jnp.float32) * vs[:, :, None, None]
     logits = jnp.einsum("bhgd,bkhd->bhgk",
                         q.astype(jnp.float32) * scale,
                         k.astype(jnp.float32))
@@ -278,6 +308,8 @@ def paged_decode_attention(
     scale: Optional[float] = None,
     backend: str = "auto",
     interpret: bool = False,
+    k_scale: Optional[jax.Array] = None,  # (P, page_size) f32
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-token attention over a paged KV cache; returns like ``q``.
 
@@ -286,16 +318,23 @@ def paged_decode_attention(
     softmax across pages), the gather-based XLA lowering elsewhere.
     Unmapped table entries are safe: their logical positions are >= the
     sequence length, so they are masked before the softmax.
+
+    ``k_scale``/``v_scale`` select int8 KV pages (per-token scales from
+    ``serving.kv_cache.write_kv_quant``): pages stream at 1 byte/element
+    and are dequantized in register / post-gather.
     """
     from .ops import _resolve
     scale = q.shape[-1] ** -0.5 if scale is None else scale
     lengths = lengths.astype(jnp.int32)
     page_table = page_table.astype(jnp.int32)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be given together")
     be = _resolve(backend)
     if be == "pallas":
         return _paged_decode_pallas(
             q, k_pages, v_pages, page_table, lengths, window=window,
-            softcap=softcap, scale=scale, interpret=interpret)
+            softcap=softcap, scale=scale, interpret=interpret,
+            k_scale=k_scale, v_scale=v_scale)
     return _paged_decode_xla(
         q, k_pages, v_pages, page_table, lengths, window=window,
-        softcap=softcap, scale=scale)
+        softcap=softcap, scale=scale, k_scale=k_scale, v_scale=v_scale)

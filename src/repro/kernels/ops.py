@@ -215,6 +215,62 @@ def _xla_fwd_scatter(x, w, out_idx, out_slot, out_valid=None):
     return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
 
 
+def _xla_fwd_quant(x, w, scales, block_idx):
+    """Quantized gather-form forward (inference only): ``w`` int8 with
+    per-block scales ``(n_rb, d_in_b)``. Each slot's int8 block is widened
+    per-slot (a rank-3 (n_rb, bL, bR) convert — never the whole 4-D slab,
+    which is SL206's contract) and the f32 scale is applied to the slot's
+    partial sum before accumulation."""
+    n_rb, d_in_b, bl, br = w.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (-1, bl))
+    idx = jnp.asarray(block_idx).T  # (d_in_b, n_rb)
+
+    def slot(acc, inp):
+        idx_f, w_f, s_f = inp  # w_f (n_rb, bL, bR) int8; s_f (n_rb,) f32
+        lhs = jnp.take(xb, idx_f, axis=-2)  # (..., n_rb, bL)
+        y_f = jnp.einsum("...ri,rio->...ro", lhs, w_f.astype(lhs.dtype))
+        return acc + y_f.astype(acc.dtype) * s_f[:, None], None
+
+    acc0 = jnp.zeros(lead + (n_rb, br), jnp.float32)
+    y = _slot_sweep(slot, acc0,
+                    (idx, jnp.moveaxis(w, 1, 0),
+                     jnp.moveaxis(jnp.asarray(scales, jnp.float32), 1, 0)))
+    return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
+
+
+def _xla_fwd_scatter_quant(x, w, scales, out_idx, out_slot, out_valid=None):
+    """Quantized row-parallel forward: per-slot rank-3 int8 gathers with
+    the gathered f32 scale folded into the partial sum (masking the scale,
+    not the slab, zeroes padded shard-local entries)."""
+    n_rb, d_in_b, bl, br = w.shape
+    n_lb, d_out_b = out_idx.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (n_lb, bl))
+    sc = jnp.asarray(scales, jnp.float32)
+    oidx = jnp.asarray(out_idx).T    # (d_out_b, n_lb)
+    oslot = jnp.asarray(out_slot).T
+    xs = (oidx, oslot)
+    if out_valid is not None:
+        xs = xs + (jnp.asarray(out_valid).T,)
+
+    def slot(acc, inp):
+        oi, os = inp[0], inp[1]
+        w_g = w[oi, os].astype(xb.dtype)  # (n_lb, bL, bR) rank-3 convert
+        s_g = sc[oi, os]                  # (n_lb,) f32
+        if out_valid is not None:
+            s_g = s_g * inp[2].astype(s_g.dtype)
+        p = jnp.einsum("...li,lio->...lo", xb, w_g)
+        p = p.astype(acc.dtype) * s_g[:, None]
+        contrib = jax.ops.segment_sum(
+            jnp.moveaxis(p, -2, 0), oi, num_segments=n_rb)
+        return acc + jnp.moveaxis(contrib, 0, -2), None
+
+    acc0 = jnp.zeros(lead + (n_rb, br), jnp.float32)
+    y = _slot_sweep(slot, acc0, xs)
+    return y.reshape(lead + (n_rb * br,)).astype(x.dtype)
+
+
 def _xla_dx(dy, w, out_idx, out_slot, out_valid=None):
     """``out_valid`` (n_lb, d_out_b) 0/1 marks padded entries of a
     shard-local (non-uniform out-degree) scatter pattern; padded entries
@@ -277,6 +333,15 @@ def _xla_fwd_batched(x, w, pat, dataflow):
         return jax.vmap(lambda xe, we: _xla_fwd_scatter(
             xe, we, pat.out_idx, pat.out_slot, pat.out_valid))(x, w)
     return jax.vmap(lambda xe, we: _xla_fwd(xe, we, pat.block_idx))(x, w)
+
+
+def _xla_fwd_quant_batched(x, w, scales, pat, dataflow):
+    if dataflow == "scatter":
+        return jax.vmap(lambda xe, we, se: _xla_fwd_scatter_quant(
+            xe, we, se, pat.out_idx, pat.out_slot, pat.out_valid))(
+                x, w, scales)
+    return jax.vmap(lambda xe, we, se: _xla_fwd_quant(
+        xe, we, se, pat.block_idx))(x, w, scales)
 
 
 def _xla_dx_batched(dy, w, pat):
@@ -672,6 +737,118 @@ def _csd_matmul_sharded(x, w, pattern, bias, activation, backend, block_m,
                             block_m, interpret, mesh, axis, lead)
 
 
+# ---------------------------------------------------------------------------
+# Quantized (int8-weight) forward — inference only, no VJP. The slab stays
+# int8 all the way into the kernel / per-slot einsum; per-block f32 scales
+# ride alongside (sharded with the same row chunking as the slab, so the
+# serving engine's model-parallel path works unchanged).
+# ---------------------------------------------------------------------------
+
+
+def _quant_matmul(x, w, w_scale, pat, bias, activation, backend, dataflow,
+                  block_m, interpret):
+    batched = w.ndim == 5
+    has_bias = bias is not None
+    if backend == "pallas":
+        n_in = x.shape[-1]
+        xf = x.reshape(((x.shape[0],) if batched else ()) + (-1, n_in))
+        m = xf.shape[-2]
+        pad = (-m) % block_m
+        if pad:
+            widths = [(0, 0)] * (xf.ndim - 2) + [(0, pad), (0, 0)]
+            xf = jnp.pad(xf, widths)
+        y = csd_spmm.csd_spmm_fwd(
+            xf, w, pat.block_idx, bias=bias, activation=activation,
+            block_m=block_m, interpret=interpret, w_scale=w_scale)
+        if pad:
+            y = y[..., :m, :]
+        return y.reshape(x.shape[:-1] + (y.shape[-1],))
+    if batched:
+        z = _xla_fwd_quant_batched(x, w, w_scale, pat, dataflow)
+    elif dataflow == "scatter":
+        z = _xla_fwd_scatter_quant(x, w, w_scale, pat.out_idx,
+                                   pat.out_slot, pat.out_valid)
+    else:
+        z = _xla_fwd_quant(x, w, w_scale, pat.block_idx)
+    if has_bias:
+        bb = bias
+        if batched:
+            bb = bias.reshape((bias.shape[0],) + (1,) * (z.ndim - 2)
+                              + bias.shape[1:])
+        z = z + bb.astype(z.dtype)
+    return csd_spmm.apply_activation(z, activation)
+
+
+def _quant_matmul_sharded(x, w, w_scale, pattern, bias, activation, backend,
+                          block_m, interpret, mesh, axis, lead_spec):
+    """Sharded quantized forward: the scale array is row-chunked with the
+    same contiguous split as the slab (``P(axis, None)`` for the 2-D
+    scales, ``P(None, axis, None)`` batched), so each device's local
+    scales line up with its local pattern rows."""
+    from ..compat import shard_map
+    from jax.sharding import PartitionSpec as P
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}")
+    k = int(mesh.shape[axis])
+    part = get_partition(pattern, k)
+    spat = _ShardPat(part)
+    batched = w.ndim == 5
+    has_bias = bias is not None
+    b = bias if has_bias else jnp.zeros((0,), x.dtype)
+    s_spec = P(None, axis, None) if batched else P(axis, None)
+
+    def run(xf, lead):
+        x_spec, w_spec, b_spec, y_spec = _shard_specs(
+            batched, has_bias, lead, axis)
+
+        def local(xl, wl, sl, bl):
+            idx, _, _, _ = _local_pattern(spat, axis)
+            bias_l = bl if has_bias else None
+            if backend == "pallas":
+                return csd_spmm.csd_spmm_fwd(
+                    xl, wl, idx, bias=bias_l, activation=activation,
+                    block_m=block_m, interpret=interpret, w_scale=sl)
+            if batched:
+                z = jax.vmap(lambda xe, we, se: _xla_fwd_quant(
+                    xe, we, se, idx))(xl, wl, sl)
+            else:
+                z = _xla_fwd_quant(xl, wl, sl, idx)
+            if has_bias:
+                bb = bl
+                if batched:
+                    bb = bl.reshape((bl.shape[0],) + (1,) * (z.ndim - 2)
+                                    + bl.shape[1:])
+                z = z + bb.astype(z.dtype)
+            return csd_spmm.apply_activation(z, activation)
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(x_spec, w_spec, s_spec, b_spec),
+                       out_specs=y_spec, check_vma=False)
+        return fn(xf, w, w_scale, b)
+
+    if backend == "pallas":
+        n_in = x.shape[-1]
+        xf = x.reshape(((x.shape[0],) if batched else ()) + (-1, n_in))
+        m = xf.shape[-2]
+        pad = (-m) % block_m
+        if pad:
+            widths = [(0, 0)] * (xf.ndim - 2) + [(0, pad), (0, 0)]
+            xf = jnp.pad(xf, widths)
+        y = run(xf, (None,) * (xf.ndim - 1))
+        if pad:
+            y = y[..., :m, :]
+        return y.reshape(x.shape[:-1] + (y.shape[-1],))
+    if lead_spec is None:
+        lead = (None,) * (x.ndim - 1)
+    else:
+        lead = tuple(lead_spec)
+        if len(lead) != x.ndim - 1:
+            raise ValueError(
+                f"lead_spec {lead_spec} must cover the {x.ndim - 1} "
+                f"leading dims of x {x.shape}")
+    return run(x, lead)
+
+
 def csd_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -686,6 +863,7 @@ def csd_matmul(
     mesh=None,
     axis: Optional[str] = None,
     lead_spec=None,
+    w_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Differentiable block-sparse junction: (..., n_in) -> (..., n_out),
     computing ``activation(x @ W_sparse + bias)`` with the epilogue fused
@@ -710,6 +888,13 @@ def csd_matmul(
     block-row / feature dim; ``lead_spec`` optionally names the mesh axes
     of ``x``'s leading dims (XLA path) so their sharding survives entry.
     Requires ``n_rb % mesh.shape[axis] == 0`` (see ``can_partition``).
+
+    Quantized form (inference only, no VJP): pass ``w`` as int8 with
+    ``w_scale`` per-block f32 scales ``(n_rb, d_in_b)`` (batched:
+    ``(E, n_rb, d_in_b)``) from ``core.quant.quantize_slab`` — the slab
+    stays int8 into the kernel / per-slot einsum and dequantization is
+    folded into the accumulate before the fused epilogue. Composes with
+    the sharded form (scales row-chunk with the slab).
     """
     if activation is not None and activation not in csd_spmm.ACTIVATIONS:
         raise ValueError(f"unsupported fused activation {activation!r}")
@@ -721,6 +906,20 @@ def csd_matmul(
             f"batched junction: x leading dim {x.shape} must match expert "
             f"count E={w.shape[0]}")
     backend = _resolve(backend)
+    if w_scale is not None:
+        if w.dtype != jnp.int8:
+            raise ValueError(
+                f"w_scale given but w.dtype={w.dtype}, expected int8")
+        if mesh is not None and axis is not None:
+            _count_dispatch(backend, "quant_sharded_batched" if batched
+                            else "quant_sharded")
+            return _quant_matmul_sharded(
+                x, w, w_scale, pattern, bias, activation, backend, block_m,
+                interpret, mesh, axis, lead_spec)
+        _count_dispatch(backend, "quant_batched" if batched else "quant")
+        return _quant_matmul(x, w, w_scale, _Pat(pattern), bias,
+                             activation, backend, dataflow, block_m,
+                             interpret)
     if mesh is not None and axis is not None:
         _count_dispatch(backend, "sharded_batched" if batched
                         else "sharded")

@@ -371,12 +371,17 @@ class Attention:
         cache: {'k_pages','v_pages'}: (P+1, page, Hkv, Dh), shared page
         pool addressed through ``page_table`` (B, max_pages). Returns
         (out (B, C, d), updated cache).
+
+        Int8 cache: when the cache carries ``k_scale``/``v_scale``
+        ((P+1, page) f32, see ``serving.kv_cache``), pages are int8 —
+        writes quantize at append, reads dequantize in kernel/post-gather.
         """
         if self.cross:
             raise NotImplementedError("paged serving: no cross-attention")
         cfg = self.cfg
         b, c = x.shape[:2]
         k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+        quant = "k_scale" in cache
         page_size = k_pages.shape[1]
         trash = k_pages.shape[0] - 1
         positions = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
@@ -385,8 +390,14 @@ class Attention:
         q, k_new, v_new = self._qkv(params, x, None, positions)
         phys, off = paged_kv.physical_addresses(
             page_table, positions, valid, page_size, trash)
-        k_pages, v_pages = paged_kv.write_kv(
-            k_pages, v_pages, k_new, v_new, phys, off)
+        if quant:
+            k_scale, v_scale = cache["k_scale"], cache["v_scale"]
+            k_pages, v_pages, k_scale, v_scale = paged_kv.write_kv_quant(
+                k_pages, v_pages, k_scale, v_scale, k_new, v_new, phys, off)
+        else:
+            k_scale = v_scale = None
+            k_pages, v_pages = paged_kv.write_kv(
+                k_pages, v_pages, k_new, v_new, phys, off)
         lengths = pos + n_new
         scale = self.dh ** -0.5
 
@@ -396,14 +407,22 @@ class Attention:
             o = paged_decode_attention(
                 qg, k_pages, v_pages, page_table, lengths,
                 window=self.window, softcap=cfg.logit_softcap,
-                scale=scale, backend=backend, interpret=interpret)
+                scale=scale, backend=backend, interpret=interpret,
+                k_scale=k_scale, v_scale=v_scale)
             o = o.reshape(b, 1, self.h * self.dh).astype(x.dtype)
         else:
             # chunk prefill: gather this batch row's logical KV view and
             # run masked grouped attention (causal against everything
             # already in the pages, including this just-written chunk)
-            k = paged_kv.gather_kv(k_pages, page_table).astype(q.dtype)
-            v = paged_kv.gather_kv(v_pages, page_table).astype(q.dtype)
+            k = paged_kv.gather_kv(k_pages, page_table)
+            v = paged_kv.gather_kv(v_pages, page_table)
+            if quant:
+                ks = paged_kv.gather_scales(k_scale, page_table)
+                vs = paged_kv.gather_scales(v_scale, page_table)
+                k = k.astype(jnp.float32) * ks[:, :, None, None]
+                v = v.astype(jnp.float32) * vs[:, :, None, None]
+            k = k.astype(q.dtype)
+            v = v.astype(q.dtype)
             qg = q.reshape(b, c, self.kv, self.groups, self.dh)
             logits = jnp.einsum("bqhgd,bkhd->bhgqk",
                                 qg.astype(jnp.float32) * scale,
@@ -424,4 +443,8 @@ class Attention:
             o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
             o = o.reshape(b, c, self.h * self.dh).astype(x.dtype)
         out = self.wo(params["o"], o)
-        return out, {"k_pages": k_pages, "v_pages": v_pages}
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+        if quant:
+            new_cache["k_scale"] = k_scale
+            new_cache["v_scale"] = v_scale
+        return out, new_cache

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.quant import QuantConfig  # noqa: F401 — re-exported config knob
+
 
 # ---------------------------------------------------------------------------
 # Sharding context: model code calls shard(x, ...) with *logical* axes; the
@@ -127,6 +129,10 @@ class SparsityConfig:
     # auto = pallas on TPU, xla elsewhere; all junctions route through the
     # one csd_matmul primitive either way
     backend: str = "auto"  # auto | xla | pallas
+    # inference-path int8 weight/KV quantization (core.quant.QuantConfig);
+    # None = full width. Training always runs full width — the engine (or
+    # an explicit quantize_tree call) applies this once at load.
+    quant: Optional["QuantConfig"] = None
 
 
 @dataclasses.dataclass(frozen=True)

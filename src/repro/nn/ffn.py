@@ -133,11 +133,14 @@ class MoE:
         if sp.enabled and sp.moe_sparsity:
             rho_up, rho_down = sp.rho_ffn
             self.up_pat = fit_block_pattern(self.d, self.d_e, rho_up, sp,
-                                            seed=seed + 31)
+                                            seed=seed + 31,
+                                            weight_dtype=self.pd)
             self.gate_pat = fit_block_pattern(self.d, self.d_e, rho_up, sp,
-                                              seed=seed + 32)
+                                              seed=seed + 32,
+                                              weight_dtype=self.pd)
             self.down_pat = fit_block_pattern(self.d_e, self.d, rho_down,
-                                              sp, seed=seed + 33)
+                                              sp, seed=seed + 33,
+                                              weight_dtype=self.pd)
         if self.mc.n_shared:
             self.shared = FFN(cfg, d_ff=self.mc.n_shared * self.d_e,
                               seed=seed + 29)
@@ -222,22 +225,29 @@ class MoE:
         aux = {"moe_lb": lb_loss, "moe_z": mc.router_zloss * z_loss}
         return gates, ids, aux
 
-    def _junction(self, xe, w, pat, activation=None, sharded=False):
+    def _junction(self, xe, w, pat, activation=None, sharded=False,
+                  w_scale=None):
         """One stacked expert junction: batched csd_matmul when pre-defined
         sparse, stacked einsum (the kernels.ref oracle form) when dense.
         ``sharded`` opts into the model-parallel junction path (per-expert
         slabs partitioned over the slab axis) when the installed rules and
-        this junction's pattern allow it."""
+        this junction's pattern allow it. ``w_scale`` selects the int8
+        slab path (inference only — the slab enters uncast)."""
         cdt = xe.dtype
         if pat is not None:
             kw = junction_shard_kwargs(pat) if sharded else {}
+            if w_scale is not None:
+                return kops.csd_matmul(xe, w, pat, activation=activation,
+                                       backend=self.backend,
+                                       w_scale=w_scale, **kw)
             return kops.csd_matmul(xe, w.astype(cdt), pat,
                                    activation=activation,
                                    backend=self.backend, **kw)
         y = jnp.einsum("ecd,edf->ecf", xe, w.astype(cdt))
         return kops.apply_activation(y, activation)
 
-    def _expert_ffn(self, up, gate, down, xe, sharded=False):
+    def _expert_ffn(self, up, gate, down, xe, sharded=False,
+                    scales=(None, None, None)):
         """xe: (E_loc, C, d) -> (E_loc, C, d), batched over experts — the
         expert compute of BOTH dispatch modes (gshard-style local and
         shard_map expert-parallel). Each junction routes through the
@@ -248,15 +258,21 @@ class MoE:
         already spends the model axis on expert parallelism) partitions
         every expert's slab over the slab axis: the 5-D batched kernels
         run shard-local with the expert index still the leading grid dim.
+
+        ``scales`` = (up_scale, gate_scale, down_scale): per-block f32
+        scales of int8 expert slabs (from ``quantize_tree``).
         """
+        s_up, s_gate, s_down = scales
         fused = _FUSABLE.get(self.cfg.act) if self.gate_pat is not None \
             else None
-        h = self._junction(xe, up, self.up_pat, sharded=sharded)
+        h = self._junction(xe, up, self.up_pat, sharded=sharded,
+                           w_scale=s_up)
         g = self._junction(xe, gate, self.gate_pat, activation=fused,
-                           sharded=sharded)
+                           sharded=sharded, w_scale=s_gate)
         if fused is None:
             g = self.act(g)
-        return self._junction(g * h, down, self.down_pat, sharded=sharded)
+        return self._junction(g * h, down, self.down_pat, sharded=sharded,
+                              w_scale=s_down)
 
     # -- local (single-shard) sort-based dispatch ----------------------------
 
@@ -304,7 +320,10 @@ class MoE:
         xp = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
         xe = xp[buf_tok]  # (E, C, d)
         ye = self._expert_ffn(params["up"], params["gate"], params["down"],
-                              xe, sharded=True)
+                              xe, sharded=True,
+                              scales=(params.get("up_scale"),
+                                      params.get("gate_scale"),
+                                      params.get("down_scale")))
         return self._combine_local(ye, buf_tok, buf_gate, T), aux
 
     # -- expert-parallel shard_map implementation ----------------------------
@@ -328,8 +347,10 @@ class MoE:
             return P(ep_axis, *([None] * (2 if pat is None else 4)))
         r_spec = P(None, None)
         all_axes = tuple(mesh.axis_names)
+        quant = "up_scale" in params
 
-        def local_fn(router, up, gate, down, xl):
+        def local_fn(router, up, gate, down, xl, *sc):
+            scales = sc if quant else (None, None, None)
             b, s, d = xl.shape
             t_loc = b * s
             x2d = xl.reshape(t_loc, d)
@@ -343,7 +364,7 @@ class MoE:
                 xe.reshape(n_ep, e_loc, c_src, d), ep_axis, 0, 0,
                 tiled=False)  # (n_ep, e_loc, C_src, d): sources stacked
             xr = jnp.moveaxis(xr, 0, 1).reshape(e_loc, n_ep * c_src, d)
-            ye = self._expert_ffn(up, gate, down, xr)
+            ye = self._expert_ffn(up, gate, down, xr, scales=scales)
             ye = jnp.moveaxis(ye.reshape(e_loc, n_ep, c_src, d), 1, 0)
             yb = jax.lax.all_to_all(ye, ep_axis, 0, 0, tiled=False)
             yb = yb.reshape(E, c_src, d)  # back at the source, per expert
@@ -351,14 +372,20 @@ class MoE:
             aux = {n: jax.lax.pmean(v, all_axes) for n, v in aux.items()}
             return y.reshape(b, s, d), aux
 
+        in_specs = (r_spec, w_spec(self.up_pat), w_spec(self.gate_pat),
+                    w_spec(self.down_pat), x_spec)
+        operands = [params["router"], params["up"], params["gate"],
+                    params["down"], x]
+        if quant:
+            # (E, n_rb, d_in_b) scales ride the expert sharding of their slab
+            in_specs = in_specs + (P(ep_axis, None, None),) * 3
+            operands += [params["up_scale"], params["gate_scale"],
+                         params["down_scale"]]
         fn = shard_map(
-            local_fn, mesh=mesh,
-            in_specs=(r_spec, w_spec(self.up_pat), w_spec(self.gate_pat),
-                      w_spec(self.down_pat), x_spec),
+            local_fn, mesh=mesh, in_specs=in_specs,
             out_specs=(x_spec, {n: P() for n in ("moe_lb", "moe_z")}),
             check_vma=False)
-        return fn(params["router"], params["up"], params["gate"],
-                  params["down"], x)
+        return fn(*operands)
 
     # -- public --------------------------------------------------------------
 

@@ -44,7 +44,9 @@ class Linear:
         if sp is not None:
             # fit_block_pattern applies the shared block-size adaptation +
             # micro-block guard; None -> this junction stays dense.
-            self.pattern = fit_block_pattern(n_in, n_out, rho, sp, seed=seed)
+            self.pattern = fit_block_pattern(n_in, n_out, rho, sp,
+                                             seed=seed,
+                                             weight_dtype=self.dtype)
             if self.pattern is not None:
                 self.backend = sp.backend
 
@@ -111,6 +113,13 @@ class Linear:
                 # (the Megatron-style all-gather at junction entry)
                 kw["lead_spec"] = tuple(logical_to_spec(
                     *(("batch",) + (None,) * (x.ndim - 2))))
+            if "w_scale" in params:
+                # quantize_tree left an int8 slab + per-block scales: the
+                # slab must enter csd_matmul uncast (SL206)
+                return kops.csd_matmul(x, w, self.pattern, bias=b,
+                                       activation=activation,
+                                       backend=self.backend,
+                                       w_scale=params["w_scale"], **kw)
             return kops.csd_matmul(x, w.astype(cdt), self.pattern,
                                    bias=b, activation=activation,
                                    backend=self.backend, **kw)

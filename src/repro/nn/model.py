@@ -377,7 +377,7 @@ class Stack:
         return new
 
     def _blk_paged_cache(self, blk, slots: int, total_pages: int,
-                         page_size: int, dtype) -> dict:
+                         page_size: int, dtype, quant_kv: bool) -> dict:
         cfg = self.cfg
         if isinstance(blk, MambaLayer):
             return blk.mixer.init_state(slots, jnp.float32)
@@ -385,20 +385,34 @@ class Stack:
             raise NotImplementedError(
                 "paged serving: cross-attention stacks not supported")
         shape = (total_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+        if quant_kv:
+            # int8 pages + per-token f32 scales (see serving.kv_cache);
+            # the attention paged_step keys the quantized path off the
+            # presence of "k_scale" in its cache dict
+            return {"self": {
+                "k_pages": jnp.zeros(shape, jnp.int8),
+                "v_pages": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:2], jnp.float32),
+                "v_scale": jnp.zeros(shape[:2], jnp.float32)}}
         return {"self": {"k_pages": jnp.zeros(shape, dtype),
                          "v_pages": jnp.zeros(shape, dtype)}}
 
     def init_paged_cache(self, slots: int, total_pages: int,
-                         page_size: int, dtype=jnp.bfloat16) -> dict:
+                         page_size: int, dtype=jnp.bfloat16,
+                         quant_kv: bool = False) -> dict:
         """Per-layer page pools (+1 write-discard page each) and per-slot
         SSM state, shaped to mirror ``init_cache``'s tree so the scan
-        traversal is identical."""
+        traversal is identical. ``quant_kv`` makes the per-layer pools
+        int8 with per-token scale buffers riding alongside (the shared
+        cross-group pool stays full-width: it is written once per step
+        and G-replicated reads dominate, so its bandwidth win is
+        marginal next to the per-layer pools)."""
         cache: dict = {
             "prologue": [self._blk_paged_cache(b, slots, total_pages,
-                                               page_size, dtype)
+                                               page_size, dtype, quant_kv)
                          for b in self.prologue],
             "epilogue": [self._blk_paged_cache(b, slots, total_pages,
-                                               page_size, dtype)
+                                               page_size, dtype, quant_kv)
                          for b in self.epilogue],
             "scan": None, "shared": None,
         }
@@ -409,7 +423,7 @@ class Stack:
                         x, (self.n_groups,) + x.shape).copy(), tree)
             cache["scan"] = [
                 rep(self._blk_paged_cache(b, slots, total_pages,
-                                          page_size, dtype))
+                                          page_size, dtype, quant_kv))
                 for b in self.unit_blocks]
             if self.shared is not None:
                 shape = (self.n_groups, total_pages + 1, page_size,

@@ -47,9 +47,12 @@ class JunctionStats:
     density: float            # the paper's rho
     sparse_macs: int          # rho * n_in * n_out
     dense_macs: int           # n_in * n_out
-    weight_bytes: int         # sparse slab storage
+    weight_bytes: int         # sparse slab storage (actual dtype width)
     dense_weight_bytes: int
     index_bytes: int          # gather-form pattern (int32)
+    quant_bits: Optional[int] = None   # inference bitwidth, None = full
+    quant_weight_bytes: int = 0        # int slab storage at quant_bits
+    quant_scale_bytes: int = 0         # per-block f32 scales
 
     @property
     def speedup(self) -> float:
@@ -63,19 +66,37 @@ class JunctionStats:
             / max(self.dense_weight_bytes, 1)
 
     @property
+    def quant_compression(self) -> float:
+        """Dense f32 storage over the quantized sparse footprint (int
+        slab + f32 scales + index pattern) — the multiplicative
+        rho x bits/32 factor, ~= 32 / (rho x bits) when the scale and
+        index overheads are small."""
+        if self.quant_bits is None:
+            return 1.0
+        dense_f32 = self.dense_macs * 4
+        sparse = self.quant_weight_bytes + self.quant_scale_bytes \
+            + self.index_bytes
+        return dense_f32 / max(sparse, 1)
+
+    @property
     def label(self) -> str:
         return (f"{self.n_in}x{self.n_out}"
                 f"b{self.block_in}x{self.block_out}"
                 f"r{self.density:g}")
 
 
-def junction_stats(bp, weight_bytes_per_elem: int = 4) -> JunctionStats:
+def junction_stats(bp, weight_bytes_per_elem: int = 4,
+                   quant_bits: Optional[int] = None) -> JunctionStats:
     """Compute :class:`JunctionStats` from a ``BlockPattern``-shaped
     object. MAC counts are per input row: ``y = x @ W`` costs one MAC per
-    stored weight element."""
+    stored weight element. ``weight_bytes_per_elem`` is the slab's actual
+    storage width (2 for bf16, 4 for f32); ``quant_bits`` adds the
+    inference-path int-quantized accounting (slab at ``quant_bits`` plus
+    one f32 scale per surviving block)."""
     sparse = int(bp.n_rb) * int(bp.d_in_b) * int(bp.block_in) \
         * int(bp.block_out)
     dense = int(bp.n_in) * int(bp.n_out)
+    n_blocks = int(bp.n_rb) * int(bp.d_in_b)
     return JunctionStats(
         n_in=int(bp.n_in), n_out=int(bp.n_out),
         block_in=int(bp.block_in), block_out=int(bp.block_out),
@@ -84,17 +105,21 @@ def junction_stats(bp, weight_bytes_per_elem: int = 4) -> JunctionStats:
         weight_bytes=sparse * weight_bytes_per_elem,
         dense_weight_bytes=dense * weight_bytes_per_elem,
         index_bytes=int(bp.block_idx.size) * 4,
+        quant_bits=quant_bits,
+        quant_weight_bytes=sparse * quant_bits // 8 if quant_bits else 0,
+        quant_scale_bytes=n_blocks * 4 if quant_bits else 0,
     )
 
 
 def register(bp, registry: Optional[metrics.Registry] = None,
-             weight_bytes_per_elem: int = 4) -> JunctionStats:
+             weight_bytes_per_elem: int = 4,
+             quant_bits: Optional[int] = None) -> JunctionStats:
     """Export one junction's static accounting as gauges (called from
     ``core.block_pattern.fit_block_pattern`` for every junction the model
     instantiates). Idempotent per signature: same-shaped junctions share
     one series."""
     reg = metrics.resolve(registry)
-    st = junction_stats(bp, weight_bytes_per_elem)
+    st = junction_stats(bp, weight_bytes_per_elem, quant_bits)
     if reg.enabled:
         j = st.label
         reg.counter(
@@ -115,6 +140,17 @@ def register(bp, registry: Optional[metrics.Registry] = None,
               "dense-equivalent weight storage bytes"),
              ("repro_junction_index_bytes", st.index_bytes,
               "gather-form pattern index storage bytes (int32)")]
+        if st.quant_bits:
+            g += [("repro_junction_quant_weight_bytes",
+                   st.quant_weight_bytes,
+                   f"int{st.quant_bits}-quantized slab storage bytes"),
+                  ("repro_junction_quant_scale_bytes",
+                   st.quant_scale_bytes,
+                   "per-block f32 dequant scale storage bytes"),
+                  ("repro_junction_quant_compression",
+                   st.quant_compression,
+                   "dense f32 storage over quantized sparse footprint "
+                   "(the multiplicative rho x bits/32 factor)")]
         for name, v, help in g:
             reg.gauge(name, help).set(v, junction=j)
     return st

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.quant import QuantConfig, quantize_tree
 from ..nn.common import dtype_of, mesh_context
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
@@ -88,6 +89,12 @@ class EngineConfig:
     # the registry at http://127.0.0.1:<port>/metrics (0 = ephemeral).
     metrics: bool = True
     metrics_port: Optional[int] = None
+    # int8 inference (core.quant.QuantConfig): quantize the checkpoint's
+    # block-sparse slabs per-block at load (weights=True) and/or store KV
+    # pages as int8 with per-token scales (kv=True). None falls back to
+    # the model's SparsityConfig.quant, so a model built with the knob
+    # serves quantized without any engine-side flag.
+    quant: Optional["QuantConfig"] = None
 
 
 class ServingEngine:
@@ -124,8 +131,21 @@ class ServingEngine:
                 f"{moe.n_routed / moe.top_k:.1f} (dropless decode) or "
                 f"use the legacy dense-cache loop")
         self.model = model
-        self.params = params
         self.config = cfg
+        # -- int8 inference: quantize once at load, serve quantized ------
+        # Training stays full width; the engine is the one place the
+        # QuantConfig is applied. quantize_tree rewrites every block-sparse
+        # slab to int8 + per-block scales and extends the sharding spec in
+        # lock-step, so the mesh path below places the scale leaves with
+        # the same rules as their slabs.
+        qc = cfg.quant if cfg.quant is not None \
+            else getattr(getattr(mc, "sparsity", None), "quant", None)
+        self.quant = qc
+        spec = model.spec()
+        if qc is not None and qc.weights:
+            params, spec = quantize_tree(params, spec)
+        self._spec = spec
+        self.params = params
         self.key = key if key is not None else jax.random.key(0)
         # speculative decode is greedy-only (acceptance compares argmax
         # continuations) and needs rollback: paged KV truncates, mamba
@@ -179,7 +199,8 @@ class ServingEngine:
         self._http = obs_metrics.serve_http(self.obs, cfg.metrics_port) \
             if cfg.metrics_port is not None else None
         self.cache = model.stack.init_paged_cache(
-            cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc))
+            cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc),
+            quant_kv=bool(qc is not None and qc.kv))
         self._next_id = 0
         self.outputs: Dict[int, np.ndarray] = {}
         # per-request admission timestamps, pruned at first token (TTFT
@@ -197,7 +218,7 @@ class ServingEngine:
             if rules is None:
                 self.rules = policy.rules_for("decode", cfg.max_slots,
                                               mesh, mc)
-            pspec = policy.param_pspecs(model.spec(), self.rules)
+            pspec = policy.param_pspecs(self._spec, self.rules)
             self._param_sh = policy.named(mesh, pspec, params)
             cspec = policy.paged_cache_pspecs(self.cache, self.rules)
             self._cache_sh = policy.named(mesh, cspec, self.cache)

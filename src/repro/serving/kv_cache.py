@@ -256,3 +256,52 @@ def gather_kv(pages: jax.Array,       # (P+1, page, Hkv, Dh)
     _, page, hkv, dh = pages.shape
     flat = pages[jnp.clip(page_table, 0, pages.shape[0] - 1)]
     return flat.reshape(b, m * page, hkv, dh)
+
+
+# ---------------------------------------------------------------------------
+# Int8-quantized pages (inference): one symmetric f32 scale per stored
+# token, written at append time next to the page buffers. Scale buffers are
+# (total_pages + 1, page_size) and share the trash-page convention, so the
+# same physical addresses drive both scatters.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array  # (B, C, Hkv, Dh)
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-token int8 quantization: the amax reduces over
+    (Hkv, Dh), one scale per (batch, token). Returns (int8, (B, C) f32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None, None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def write_kv_quant(k_pages: jax.Array,  # (P+1, page, Hkv, Dh) int8
+                   v_pages: jax.Array,
+                   k_scale: jax.Array,  # (P+1, page) f32
+                   v_scale: jax.Array,
+                   k_new: jax.Array,    # (B, C, Hkv, Dh) full-width
+                   v_new: jax.Array,
+                   phys: jax.Array,     # (B, C)
+                   off: jax.Array       # (B, C)
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Quantize-at-append: new KV is reduced to int8 + per-token scale
+    and both are scattered through the same (phys, off) addresses."""
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    k_pages = k_pages.at[phys, off].set(kq)
+    v_pages = v_pages.at[phys, off].set(vq)
+    k_scale = k_scale.at[phys, off].set(ks)
+    v_scale = v_scale.at[phys, off].set(vs)
+    return k_pages, v_pages, k_scale, v_scale
+
+
+def gather_scales(scales: jax.Array,     # (P+1, page)
+                  page_table: jax.Array  # (B, max_pages)
+                  ) -> jax.Array:
+    """Scale-side twin of :func:`gather_kv`: (B, max_pages*page) f32."""
+    b, m = page_table.shape
+    _, page = scales.shape
+    flat = scales[jnp.clip(page_table, 0, scales.shape[0] - 1)]
+    return flat.reshape(b, m * page)

@@ -206,6 +206,15 @@ def paged_cache_pspecs(cache_shapes: Any, rules: dict) -> Any:
                 return P(s, None, None, None)
             if rank == 5:
                 return P(None, s, None, None, None)
+        if "k_scale" in names or "v_scale" in names:
+            # int8 KV per-token scales (P+1, page) or (G, P+1, page):
+            # the page dim shards exactly like its pages, so the (phys,
+            # off) addresses computed on the host index shard-local rows
+            # on every device identically
+            if rank == 2:
+                return P(s, None)
+            if rank == 3:
+                return P(None, s, None)
         return P(*([None] * rank))
 
     return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

@@ -130,6 +130,50 @@ def test_shard_map_with_psum_is_clean():
     assert jaxpr_pass.lint_closed_jaxpr(traced.jaxpr, "ok") == []
 
 
+def test_whole_slab_dequant_flags_sl206():
+    """The injected quantization-defeating junction (whole-slab upcast
+    before csd_matmul) must trip SL206; the shipped fused-dequant path
+    on the same shapes must stay clean."""
+    from repro.core.block_pattern import make_block_pattern
+    from repro.core.quant import dequantize_slab, quantize_slab
+    from repro.kernels import ops as kops
+
+    bp = make_block_pattern(64, 64, 0.5, block_in=16, block_out=16, seed=0)
+    w_aval = jax.ShapeDtypeStruct((bp.n_rb, bp.d_in_b, 16, 16), jnp.int8)
+    s_aval = jax.ShapeDtypeStruct((bp.n_rb, bp.d_in_b), jnp.float32)
+    x_aval = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+
+    def bad(x, w, s):
+        return kops.csd_matmul(x, dequantize_slab(w, s), bp, backend="xla")
+
+    traced = jax.jit(bad).trace(x_aval, w_aval, s_aval)
+    findings = jaxpr_pass._lint_quant(traced.jaxpr, "bad", None)
+    assert _codes(findings) == ["SL206"], findings
+
+    def good(x, w, s):
+        return kops.csd_matmul(x, w, bp, backend="xla", w_scale=s)
+
+    traced = jax.jit(good).trace(x_aval, w_aval, s_aval)
+    assert jaxpr_pass._lint_quant(traced.jaxpr, "good", None) == []
+    # the batched (expert-major) fallback's vmapped per-slot converts
+    # must not pattern-match the 5-D slab shape either
+    e = 3
+    w5 = jax.ShapeDtypeStruct((e, bp.n_rb, bp.d_in_b, 16, 16), jnp.int8)
+    s5 = jax.ShapeDtypeStruct((e, bp.n_rb, bp.d_in_b), jnp.float32)
+    x5 = jax.ShapeDtypeStruct((e, 4, 64), jnp.float32)
+    traced = jax.jit(good).trace(x5, w5, s5)
+    assert jaxpr_pass._lint_quant(traced.jaxpr, "good5", None) == []
+
+
+def test_selftest_inject_produces_sl206():
+    """run(inject=True) adds the broken quant subject and it must fire —
+    the CI gate that proves SL206 has teeth."""
+    traced, _, subject = jaxpr_pass._trace_quant_inject(None)
+    assert subject == "quant_inject[selftest]"
+    findings = jaxpr_pass._lint_quant(traced.jaxpr, subject, None)
+    assert _codes(findings) == ["SL206"], findings
+
+
 def test_missing_donation_flags_sl202():
     aval = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)  # 4 MiB
 
