@@ -1,0 +1,80 @@
+"""CI gate over the ``*_tuned`` rows in a BENCH_PR10.json artifact.
+
+    PYTHONPATH=src python -m benchmarks.check_tuned BENCH_PR10.json
+
+Checks (exit 1 on any failure):
+
+* every row whose ``derived`` carries a ``tuned_speedup`` must satisfy
+  ``tuned_speedup >= 1 - TOL`` — the measured-auto dispatch is never
+  allowed to lose to the static heuristic it replaces (ties land at
+  exactly 1.0 by construction: when the winner is the default
+  configuration the default timing is reused);
+* ``kernel/csd_spmm_rho0.5_tuned``: ``speedup_vs_dense >= 0.9`` — the
+  rho=0.5 regime, where both sparse dataflows lose to one GEMM, must
+  recover to ~dense parity via the dense-ref escape hatch;
+* ``kernel/csd_decode_m2_rho0.25_tuned``: ``speedup_vs_dense >= 1.0`` —
+  the M=2 decode cliff (gather pathology) must no longer lose to dense.
+
+``TOL`` absorbs residual best-of-k measurement noise on genuinely
+re-measured (non-tie) rows; the named gates are the ISSUE's acceptance
+bars and carry their own thresholds.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOL = 0.05
+
+# name -> (derived field, minimum) — the ISSUE acceptance bars
+NAMED_GATES = {
+    "kernel/csd_spmm_rho0.5_tuned": ("speedup_vs_dense", 0.9),
+    "kernel/csd_decode_m2_rho0.25_tuned": ("speedup_vs_dense", 1.0),
+}
+
+
+def check(rows: list) -> list:
+    failures = []
+    tuned = {r["name"]: r for r in rows
+             if isinstance(r.get("derived"), dict)
+             and "tuned_speedup" in r["derived"]}
+    if not tuned:
+        return ["no *_tuned rows found (tuning did not run?)"]
+    for name, row in sorted(tuned.items()):
+        sp = float(row["derived"]["tuned_speedup"])
+        if sp < 1.0 - TOL:
+            failures.append(
+                f"{name}: tuned_speedup {sp:.2f} < {1.0 - TOL:.2f} "
+                f"(backend={row['derived'].get('backend')})")
+    for name, (field, lo) in NAMED_GATES.items():
+        row = tuned.get(name)
+        if row is None:
+            failures.append(f"{name}: row missing from artifact")
+            continue
+        v = row["derived"].get(field)
+        if v is None or float(v) < lo:
+            failures.append(f"{name}: {field} {v} < {lo}")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else "BENCH_PR10.json"
+    with open(path) as fh:
+        rows = json.load(fh)
+    failures = check(rows)
+    n_tuned = sum(1 for r in rows if isinstance(r.get("derived"), dict)
+                  and "tuned_speedup" in r["derived"])
+    if failures:
+        print(f"check_tuned: {len(failures)} failure(s) over {n_tuned} "
+              f"tuned rows in {path}:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"check_tuned: {n_tuned} tuned rows in {path} all >= "
+          f"{1.0 - TOL:.2f}x vs heuristic; named gates pass")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,20 +16,40 @@ ROWS = []
 
 
 def emit(name: str, us_per_call: float, derived):
-    row = f"{name},{us_per_call:.2f},{derived}"
+    """Record one benchmark row.
+
+    ``us_per_call`` is kept as a NUMBER and ``derived`` as a structured
+    object (a dict of numeric/string fields; a bare scalar is wrapped as
+    ``{"value": v}``, ``""``/``None`` as ``{}``) so BENCH_*.json artifacts
+    diff numerically across PRs — the PR-9 files emitted both as strings.
+    The printed CSV contract (``name,us_per_call,derived``) is unchanged.
+    """
+    if derived is None or (isinstance(derived, str) and not derived):
+        derived = {}
+    elif not isinstance(derived, dict):
+        derived = {"value": derived}
+    row = {"name": name, "us_per_call": round(float(us_per_call), 2),
+           "derived": derived}
     ROWS.append(row)
-    print(row, flush=True)
+    if list(derived) == ["value"]:
+        dstr = str(derived["value"])
+    else:
+        dstr = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{row['us_per_call']:.2f},{dstr}", flush=True)
 
 
-def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2,
-              name: str = "call") -> float:
-    """Median wall-time per call in microseconds (blocks on jax arrays).
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+              repeats: int = 3, name: str = "call") -> float:
+    """Best-of-``repeats`` median wall-time per call in microseconds
+    (blocks on jax arrays).
 
-    Delegates to ``repro.obs.trace.timed_call``: each iteration is a
-    ``bench/<name>`` span in the shared obs registry, so benchmark rows
-    and live metrics read the same clock."""
+    Delegates to ``repro.obs.trace.timed_call`` — the same measurement
+    core the autotuner uses, so tuning decisions and benchmark rows read
+    one clock. Defaults changed in PR 10: 3 rounds x 5-iteration medians
+    (best-of-k absorbs background-load noise the old single 10-iteration
+    median leaked into BENCH rows)."""
     return obs_trace.timed_call(fn, *args, iters=iters, warmup=warmup,
-                                name=name)
+                                repeats=repeats, name=name)
 
 
 @lru_cache(maxsize=4)

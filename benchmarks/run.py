@@ -4,14 +4,18 @@
 ``PYTHONPATH=src python -m benchmarks.run --full``     full Table II ladder
 ``PYTHONPATH=src python -m benchmarks.run --only table2,fig12``
 ``PYTHONPATH=src python -m benchmarks.run --quick``    kernel + serving only,
-                                                       writes BENCH_PR9.json
+                                                       writes BENCH_PR10.json
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
-``--quick`` additionally writes the rows to ``BENCH_PR9.json`` at the repo
-top level (CI uploads it): one object per row with a ``dtype`` column
-("int8" for the quantized-junction / quantized-engine rows, "float32"
-otherwise) so the int8 decode-regime wins sit next to their full-width
-baselines in one artifact.
+``--quick`` additionally writes the rows to ``BENCH_PR10.json`` at the repo
+top level (CI uploads it): one object per row with ``us_per_call`` as a
+number, ``derived`` as a structured object (PR 10 — the PR-9 artifact
+carried both as strings) and a ``dtype`` column ("int8" for the
+quantized-junction / quantized-engine rows, "float32" otherwise) so the
+int8 decode-regime wins sit next to their full-width baselines in one
+artifact. With a warm ``REPRO_TUNE_CACHE`` the ``*_tuned`` kernel rows
+compare the measured-auto dispatch against the static heuristic
+(``benchmarks.check_tuned`` gates them in CI).
 """
 from __future__ import annotations
 
@@ -33,7 +37,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="kernel + serving benches only; write "
-                         "BENCH_PR9.json at the repo top level")
+                         "BENCH_PR10.json at the repo top level")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     ap.add_argument("--epochs", type=int, default=None)
@@ -95,13 +99,9 @@ def main() -> None:
 
     if args.quick:
         from .common import ROWS
-        rows = []
-        for r in ROWS:
-            name, us, derived = r.split(",", 2)
-            rows.append({"name": name, "us_per_call": us,
-                         "derived": derived, "dtype": _row_dtype(name)})
+        rows = [dict(r, dtype=_row_dtype(r["name"])) for r in ROWS]
         path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_PR9.json")
+                            "BENCH_PR10.json")
         with open(path, "w") as fh:
             json.dump(rows, fh, indent=1)
         print(f"wrote {os.path.normpath(path)} ({len(rows)} rows)")

@@ -28,6 +28,8 @@ SL302  coverage hole: a left/right block with no surviving edges
 SL303  scatter form (out_idx/out_slot/out_valid) disagrees with gather form
 SL304  degree bound violation vs the paper's structured-sparsity constraint
 SL305  per-shard slot counts unbalanced (SPMD shards would diverge in work)
+SL401  tune-cache entry names an illegal configuration for its regime
+SL402  tune-cache file/key unreadable (audit fails; runtime falls back)
 =====  =====================================================================
 """
 from __future__ import annotations

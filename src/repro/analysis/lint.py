@@ -8,6 +8,11 @@ config, on CPU, with no TPU time:
                shard_map missing collectives (forced 8-device mesh)
 * pattern pass — SL3xx: BlockPattern / partition invariants
 
+An optional fourth pass (``--passes ...,tune``) audits a persisted
+``repro.tune`` dispatch cache — SL4xx: illegal tuned entries, plus SL1xx
+re-certification of every cached Pallas configuration (``--tune-cache``
+names the file; default is the path runtime lookups resolve).
+
 Exits non-zero on any unsuppressed finding or any pass error (a hot path
 the linter cannot trace is not a certified hot path). ``--selftest-inject``
 adds a deliberately race-broken copy of ``csd_spmm_fwd`` to the grid pass
@@ -47,7 +52,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--output", default=None,
                     help="write the report to this file as well as stdout")
     ap.add_argument("--passes", default="grid,jaxpr,pattern",
-                    help="comma list from {grid,jaxpr,pattern}")
+                    help="comma list from {grid,jaxpr,pattern,tune}")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tune pass: cache file to audit (default: the "
+                         "path runtime lookups resolve)")
     ap.add_argument("--configs", default=None,
                     help="comma list of arch names (default: all registered)")
     ap.add_argument("--vmem-budget", type=int, default=None,
@@ -63,12 +71,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     _force_devices(args.devices)
 
     # deferred so _force_devices precedes the first jax import
-    from . import grid_pass, jaxpr_pass, pattern_pass
+    from . import grid_pass, jaxpr_pass, pattern_pass, tune_pass
     from .findings import Report, apply_suppressions
     from .suppressions import SUPPRESSIONS
 
     passes = [p.strip() for p in args.passes.split(",") if p.strip()]
-    unknown = set(passes) - {"grid", "jaxpr", "pattern"}
+    unknown = set(passes) - {"grid", "jaxpr", "pattern", "tune"}
     if unknown:
         ap.error(f"unknown pass(es): {sorted(unknown)}")
     configs = [c.strip() for c in args.configs.split(",")] \
@@ -92,6 +100,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         report.extend(f)
         report.covered["jaxpr"] = covered
         report.errors.extend(errors)
+    if "tune" in passes:
+        f, covered = tune_pass.run(args.tune_cache)
+        report.extend(f)
+        report.covered["tune"] = covered
 
     if not args.no_suppress:
         report.findings = apply_suppressions(report.findings, SUPPRESSIONS)

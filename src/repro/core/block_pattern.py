@@ -398,6 +398,21 @@ def fit_block_pattern(n_in: int, n_out: int, rho: float, sp,
     min_b = min(32, sp.block_in, sp.block_out)
     if bi < min_b or bo < min_b:
         return None
+    # measured tile refit (PR 10, opt-in via REPRO_TUNE_BLOCKS=1): the
+    # autotuner's per-junction (bL, bR) winner replaces the config tiles.
+    # Opt-in because a different tile is a different pattern — different
+    # parameter shapes and numerics, unlike the performance-only dispatch
+    # cache. Illegal/shrunken-away tuned tiles fall back to the heuristic.
+    if os.environ.get("REPRO_TUNE_BLOCKS", "") not in ("", "0"):
+        from .. import tune
+        t = tune.decide_tile(
+            n_in=n_in, n_out=n_out, rho=rho,
+            dtype=str(np.dtype(weight_dtype or np.float32)))
+        if t is not None:
+            tbi = shrink_to_divisor(n_in, int(t["block_in"]))
+            tbo = shrink_to_divisor(n_out, int(t["block_out"]))
+            if tbi >= min_b and tbo >= min_b:
+                bi, bo = tbi, tbo
     bp = make_block_pattern(
         n_in, n_out, rho, block_in=bi, block_out=bo, method=sp.method,
         seed=sp.seed + seed, cf_type=sp.cf_type, dither=sp.dither)

@@ -329,7 +329,22 @@ def paged_decode_attention(
     page_table = page_table.astype(jnp.int32)
     if (k_scale is None) != (v_scale is None):
         raise ValueError("k_scale and v_scale must be given together")
-    be = _resolve(backend)
+    be = None
+    if backend == "auto":
+        # measured-auto (PR 10): trace-time consult of the tune cache for
+        # this decode regime; a miss keeps the static heuristic. This is
+        # the engine's decode-kernel selection — EngineConfig.backend
+        # flows here through model.paged_step.
+        from .. import tune
+        ent = tune.decide_decode(
+            b=q.shape[0], h_kv=q.shape[1], groups=q.shape[2],
+            head_dim=q.shape[3], page_size=k_pages.shape[1],
+            n_pages=page_table.shape[1], pool=k_pages.shape[0],
+            quant=k_scale is not None, dtype=str(q.dtype))
+        if ent is not None:
+            be = str(ent["backend"])
+    if be is None:
+        be = _resolve(backend)
     if be == "pallas":
         return _paged_decode_pallas(
             q, k_pages, v_pages, page_table, lengths, window=window,

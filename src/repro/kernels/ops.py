@@ -20,7 +20,19 @@ final slot's consumer. Backend selection:
                             (GSPMD-friendly; what the multi-pod dry-run
                             lowers, letting the SPMD partitioner place
                             collectives);
-* ``backend="auto"``      — pallas on TPU, xla elsewhere.
+* ``backend="dense"``     — the dense-ref escape hatch: densify the slab
+                            (static zero-filled block gather) and run ONE
+                            dense GEMM. Algebraically identical, grads
+                            flow only to pattern blocks; the winning move
+                            in regimes where structured sparsity loses to
+                            a single dense matmul (e.g. rho=0.5 on CPU);
+* ``backend="auto"``      — *measured*-auto: consult the ``repro.tune``
+                            dispatch cache at trace time (key: op,
+                            M-regime, junction dims, rho, E, dtype/quant,
+                            device kind) and run the benchmarked winner;
+                            on a cache miss (or ``REPRO_TUNE_DISABLE=1``)
+                            fall back to the static heuristic — pallas on
+                            TPU, xla elsewhere.
 
 ``dataflow`` picks the XLA lowering of the forward: ``"gather"`` is
 column-parallel (each right block pulls its fan-in — output-sharding
@@ -355,6 +367,69 @@ def _xla_dw_batched(x, dy, pat):
 
 
 # ---------------------------------------------------------------------------
+# Dense-ref escape hatch (backend="dense"). The autotuner's measurement
+# says some regimes (rho=0.5 at training M on CPU) lose to one dense GEMM
+# no matter which sparse dataflow runs — the paper's complexity win is a
+# FLOP count, the crossover point is a device property. Densify with a
+# STATIC slot map + jnp.take (one appended zero block serves every hole),
+# never a scatter: the take fuses into the GEMM's prologue (~2% overhead
+# at M=512) where `.at[].set()` costs tens of ms per call.
+# ---------------------------------------------------------------------------
+
+
+def _dense_map(pat: _Pat) -> np.ndarray:
+    """Static flat map dense block (lb, rb) -> slab slot, sentinel = the
+    appended zero block. Cached on the pattern carrier (pure numpy)."""
+    cached = getattr(pat, "_dense_map_arr", None)
+    if cached is not None:
+        return cached
+    n_rb, d_in_b = pat.block_idx.shape
+    n_lb = pat.out_idx.shape[0]
+    sentinel = n_rb * d_in_b
+    slot_of = np.full((n_lb, n_rb), sentinel, np.int32)
+    rows = np.repeat(np.arange(n_rb, dtype=np.int32), d_in_b)
+    slot_of[pat.block_idx.reshape(-1), rows] = np.arange(
+        n_rb * d_in_b, dtype=np.int32)
+    if int((slot_of != sentinel).sum()) != n_rb * d_in_b:
+        raise ValueError(
+            "backend='dense' requires distinct (left, right) block pairs "
+            "per pattern (duplicate fan-in entry found)")
+    pat._dense_map_arr = slot_of.reshape(-1)
+    return pat._dense_map_arr
+
+
+def _densify_slab(w, pat: _Pat):
+    """(n_rb, d_in_b, bL, bR) slab -> (n_in, n_out) dense weight (zeros at
+    non-pattern blocks). Batched: (E, ...) -> (E, n_in, n_out)."""
+    if w.ndim == 5:
+        return jax.vmap(lambda we: _densify_slab(we, pat))(w)
+    n_rb, d_in_b, bl, br = w.shape
+    n_lb = pat.out_idx.shape[0]
+    wf = jnp.concatenate([w.reshape(n_rb * d_in_b, bl, br),
+                          jnp.zeros((1, bl, br), w.dtype)])
+    dense = jnp.take(wf, jnp.asarray(_dense_map(pat)), axis=0)
+    dense = jnp.moveaxis(dense.reshape(n_lb, n_rb, bl, br), -2, -3)
+    return dense.reshape(n_lb * bl, n_rb * br)
+
+
+def _dense_grad_slab(dwd, pat: _Pat):
+    """Gather the slab-layout weight gradient back out of a dense
+    (n_in, n_out) gradient — grads at zero blocks are structurally zero
+    and are dropped, exactly matching the sparse-path dw."""
+    if dwd.ndim == 3:
+        return jax.vmap(lambda g: _dense_grad_slab(g, pat))(dwd)
+    n_rb, d_in_b = pat.block_idx.shape
+    bl, br = pat.block_in, pat.block_out
+    n_lb = pat.out_idx.shape[0]
+    g = jnp.moveaxis(dwd.reshape(n_lb, bl, n_rb, br), 1, 2)
+    g = g.reshape(n_lb * n_rb, bl, br)
+    flat = (pat.block_idx.astype(np.int64) * n_rb
+            + np.arange(n_rb, dtype=np.int64)[:, None])  # (n_rb, d_in_b)
+    dw = jnp.take(g, jnp.asarray(flat.reshape(-1)), axis=0)
+    return dw.reshape(n_rb, d_in_b, bl, br)
+
+
+# ---------------------------------------------------------------------------
 # Differentiable core. Signature: (x, w, b) differentiable; everything else
 # static. ``b`` is a zero-length placeholder when has_bias is False so the
 # custom_vjp arity stays fixed. Batched-ness is a shape property
@@ -380,7 +455,10 @@ def _fwd_impl(x, w, b, pat, has_bias, activation, backend, dataflow,
             x, w, pat.block_idx, bias=bias, activation=activation,
             block_m=block_m, interpret=interpret)
         return y, None
-    if batched:
+    if backend == "dense":
+        wd = _densify_slab(w, pat).astype(x.dtype)
+        z = jnp.einsum("e...i,eio->e...o", x, wd) if batched else x @ wd
+    elif batched:
         z = _xla_fwd_batched(x, w, pat, dataflow)
     elif dataflow == "scatter":
         z = _xla_fwd_scatter(x, w, pat.out_idx, pat.out_slot,
@@ -467,6 +545,23 @@ def _bwd_vjp(pat, has_bias, activation, backend, dataflow, block_m,
         db = jnp.sum(dy.astype(jnp.float32), axis=axes).astype(b.dtype)
     else:
         db = jnp.zeros((0,), b.dtype)
+    if backend == "dense":
+        # BP/UP against the densified weight: dx = dy @ W^T, dw = x^T dy
+        # gathered back to slab layout (zero-block grads dropped — the
+        # same structural-zero contract as the sparse sweeps)
+        wd = _densify_slab(w, pat).astype(dy.dtype)
+        if batched:
+            dx = jnp.einsum("e...o,eio->e...i", dy, wd)
+            xf = x.reshape(x.shape[0], -1, x.shape[-1])
+            dyf = dy.reshape(dy.shape[0], -1, dy.shape[-1])
+            dwd = jnp.einsum("emi,emo->eio", xf, dyf.astype(xf.dtype))
+        else:
+            dx = jnp.einsum("...o,io->...i", dy, wd)
+            xf = x.reshape(-1, x.shape[-1])
+            dyf = dy.reshape(-1, dy.shape[-1])
+            dwd = xf.T @ dyf.astype(xf.dtype)
+        dw = _dense_grad_slab(dwd, pat)
+        return dx.astype(x.dtype), dw.astype(w.dtype), db
     if batched:
         dx = _xla_dx_batched(dy, w, pat)
         dw = _xla_dw_batched(x, dy, pat)
@@ -874,6 +969,13 @@ def csd_matmul(
     all ``E`` expert junctions over one shared pattern and returns
     ``(E, ..., n_out)`` (see module docstring).
 
+    ``backend`` is ``"auto" | "pallas" | "xla" | "dense"``. ``"auto"`` is
+    *measured*: the ``repro.tune`` dispatch cache is consulted at trace
+    time and the benchmarked winner for this call's regime runs (miss or
+    ``REPRO_TUNE_DISABLE=1`` -> the static heuristic). ``"dense"`` is the
+    escape hatch: densify the slab and run one GEMM — same math, grads
+    only at pattern blocks; plain/batched unquantized junctions only.
+
     ``activation`` is ``None | "relu" | "gelu"`` (gelu = tanh approximation,
     matching the model stack's activation registry). Leading dims are
     flattened to M (per expert in the batched form) and padded to
@@ -905,28 +1007,59 @@ def csd_matmul(
         raise ValueError(
             f"batched junction: x leading dim {x.shape} must match expert "
             f"count E={w.shape[0]}")
-    backend = _resolve(backend)
-    if w_scale is not None:
+    if backend not in ("auto", "pallas", "xla", "dense"):
+        raise ValueError(f"unknown backend {backend!r}")
+    sharded = mesh is not None and axis is not None
+    quant = w_scale is not None
+    if quant:
+        form = ("quant_sharded_batched" if batched else "quant_sharded") \
+            if sharded else ("quant_batched" if batched else "quant")
+    elif sharded:
+        form = "sharded_batched" if batched else "sharded"
+    else:
+        form = "batched" if batched else "plain"
+    if backend == "auto":
+        # measured-auto (PR 10): consult the tune cache at trace time and
+        # dispatch the benchmarked winner for this regime; a miss (or
+        # REPRO_TUNE_DISABLE=1) falls back to the static heuristic below.
+        # Sharded forms key on the shard-local output width — the tuning
+        # decision follows partition_pattern's per-device shapes.
+        from .. import tune
+        k = int(mesh.shape[axis]) if sharded else 1
+        lead = x.shape[1:-1] if batched else x.shape[:-1]
+        m = 1
+        for d in lead:
+            m *= int(d)
+        ent = tune.decide_junction(
+            m=m, n_in=pattern.n_in, n_out=pattern.n_out // k,
+            rho=pattern.density, E=w.shape[0] if batched else 0,
+            dtype=str(x.dtype), quant=quant, form=form,
+            block_in=pattern.block_in, block_out=pattern.block_out)
+        if ent is not None:
+            backend = str(ent["backend"])
+            dataflow = str(ent.get("dataflow", dataflow))
+            block_m = int(ent.get("block_m", block_m))
+        else:
+            backend = _resolve(backend)
+    if backend == "dense" and (quant or sharded):
+        raise ValueError("backend='dense' supports only the plain/batched "
+                         "unquantized junction")
+    _count_dispatch(backend, form)
+    if quant:
         if w.dtype != jnp.int8:
             raise ValueError(
                 f"w_scale given but w.dtype={w.dtype}, expected int8")
-        if mesh is not None and axis is not None:
-            _count_dispatch(backend, "quant_sharded_batched" if batched
-                            else "quant_sharded")
+        if sharded:
             return _quant_matmul_sharded(
                 x, w, w_scale, pattern, bias, activation, backend, block_m,
                 interpret, mesh, axis, lead_spec)
-        _count_dispatch(backend, "quant_batched" if batched else "quant")
         return _quant_matmul(x, w, w_scale, _Pat(pattern), bias,
                              activation, backend, dataflow, block_m,
                              interpret)
-    if mesh is not None and axis is not None:
-        _count_dispatch(backend, "sharded_batched" if batched
-                        else "sharded")
+    if sharded:
         return _csd_matmul_sharded(x, w, pattern, bias, activation,
                                    backend, block_m, interpret, mesh, axis,
                                    lead_spec)
-    _count_dispatch(backend, "batched" if batched else "plain")
     pat = _Pat(pattern)
     has_bias = bias is not None
     b = bias if has_bias else jnp.zeros((0,), x.dtype)

@@ -198,6 +198,26 @@ class ServingEngine:
             spec_k=self.spec_k, drafter=drafter, obs=self.obs)
         self._http = obs_metrics.serve_http(self.obs, cfg.metrics_port) \
             if cfg.metrics_port is not None else None
+        # -- measured decode dispatch (PR 10): surface which decode
+        # kernel this engine's regime will run. The authoritative consult
+        # happens at trace time inside paged_decode_attention (so it sees
+        # the actual q dtype); this lookup records the decision as an obs
+        # counter so ``repro.obs.dump`` shows tuned vs heuristic serving.
+        heads = getattr(mc, "n_heads", 0)
+        if cfg.backend == "auto" and heads:
+            from .. import tune
+            hkv = getattr(mc, "n_kv_heads", heads) or heads
+            ent = tune.decide_decode(
+                b=cfg.max_slots, h_kv=hkv, groups=heads // hkv,
+                head_dim=mc.head_dim, page_size=cfg.page_size,
+                n_pages=cfg.max_pages_per_seq, pool=cfg.total_pages,
+                quant=bool(qc is not None and qc.kv),
+                dtype=str(dtype_of(mc)))
+            self.obs.counter(
+                "repro_tune_engine_decode_total",
+                "engine decode-kernel selection (tuned=cache hit)",
+            ).inc(backend=ent["backend"] if ent else "heuristic",
+                  tuned=str(ent is not None).lower())
         self.cache = model.stack.init_paged_cache(
             cfg.max_slots, cfg.total_pages, cfg.page_size, dtype_of(mc),
             quant_kv=bool(qc is not None and qc.kv))

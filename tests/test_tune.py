@@ -1,0 +1,420 @@
+"""repro.tune: cache lifecycle, dispatch parity, certification gate.
+
+The autotuner's contract is *performance-only*: a cache hit may change
+which legal backend runs, never the numbers that backend produces — so
+the parity tests here compare ``backend="auto"`` against the explicitly
+named backend bit-for-bit (``np.array_equal``, not allclose). Lifecycle
+tests cover the graceful-fallback matrix from ISSUE 10: round-trip,
+corrupt/truncated file, schema-version mismatch, and the
+``REPRO_TUNE_DISABLE=1`` kill switch restoring the static heuristic.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core import make_block_pattern
+from repro.kernels import ops
+from repro.tune import cache as tcache
+from repro.tune import certify, tuner
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Every test gets its own cache file; no test touches the user's
+    XDG cache or leaks a singleton into the next test."""
+    monkeypatch.setenv(tcache.ENV_PATH, str(tmp_path / "tune_cache.json"))
+    monkeypatch.delenv(tcache.ENV_DISABLE, raising=False)
+    monkeypatch.delenv(tcache.ENV_BLOCKS, raising=False)
+    tune.reset_cache()
+    tune.clear_pending()
+    yield
+    tune.reset_cache()
+    tune.clear_pending()
+
+
+def _pattern(n_in=128, n_out=256, rho=0.5, block=32):
+    return make_block_pattern(n_in, n_out, rho, block_in=block,
+                              block_out=block, seed=0)
+
+
+def _put_junction_entry(bp, m, entry, **kw):
+    """Write one dispatch entry for (bp, m) into the active cache file and
+    force a re-load so the next trace-time lookup hits it."""
+    key = tune.junction_key(m=m, n_in=bp.n_in, n_out=bp.n_out,
+                            rho=bp.density, E=kw.pop("E", 0),
+                            dtype=kw.pop("dtype", "float32"),
+                            quant=kw.pop("quant", False),
+                            form=kw.pop("form", "plain"))
+    c = tcache.TuneCache(tcache.default_path())
+    c.load()
+    c.put(key, entry)
+    tune.reset_cache()
+    return key
+
+
+# ---------------------------------------------------------------------------
+# cache lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip(tmp_path):
+    p = str(tmp_path / "rt.json")
+    c = tcache.TuneCache(p)
+    c.put("k1", {"backend": "xla", "dataflow": "scatter"})
+    c.put("k2", {"backend": "dense"})
+    c2 = tcache.TuneCache(p).load()
+    assert c2.load_error is None
+    assert c2.entries == c.entries
+    doc = json.load(open(p))
+    assert doc["schema"] == tcache.SCHEMA_VERSION
+    # atomic write leaves no temp litter behind
+    assert [f for f in os.listdir(tmp_path) if f != "rt.json"] == []
+
+
+@pytest.mark.parametrize("payload", [
+    "{not json at all",                                   # corrupt
+    json.dumps({"schema": tcache.SCHEMA_VERSION,
+                "entries": {"k": {"backend": "xla"}}})[:-9],  # truncated
+    json.dumps([1, 2, 3]),                                # wrong root type
+])
+def test_cache_corrupt_loads_empty(tmp_path, payload):
+    p = tmp_path / "bad.json"
+    p.write_text(payload)
+    c = tcache.TuneCache(str(p)).load()
+    assert c.entries == {}
+    assert c.load_error is not None
+
+
+def test_cache_schema_mismatch_ignored(tmp_path):
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps({
+        "schema": tcache.SCHEMA_VERSION + 1,
+        "entries": {"k": {"backend": "dense"}}}))
+    c = tcache.TuneCache(str(p)).load()
+    assert c.entries == {}          # wholesale ignore, never partial
+    assert "schema" in c.load_error
+
+
+def test_cache_missing_file_is_clean_empty(tmp_path):
+    c = tcache.TuneCache(str(tmp_path / "never_written.json")).load()
+    assert c.entries == {} and c.load_error is None
+
+
+def test_non_dict_entries_filtered(tmp_path):
+    p = tmp_path / "mixed.json"
+    p.write_text(json.dumps({
+        "schema": tcache.SCHEMA_VERSION,
+        "entries": {"good": {"backend": "xla"}, "bad": "a string"}}))
+    c = tcache.TuneCache(str(p)).load()
+    assert list(c.entries) == ["good"]
+
+
+def test_m_bucket():
+    assert [tcache.m_bucket(m) for m in (1, 2, 3, 8, 100, 500)] == \
+        [1, 2, 4, 8, 128, 512]
+    assert tcache.m_bucket(10 ** 7) == 4096   # capped
+    assert tcache.m_bucket(0) == 1
+
+
+# ---------------------------------------------------------------------------
+# decide_*: miss recording, invalid-entry guards, kill switch
+# ---------------------------------------------------------------------------
+
+
+def test_decide_miss_records_pending_spec():
+    assert tune.decide_junction(m=7, n_in=64, n_out=128, rho=0.5) is None
+    (key, spec), = tune.pending().items()
+    assert key.startswith("csd_spmm|plain|m8|in64|out128|rho0.5")
+    assert spec == dict(op="csd_spmm", m=7, n_in=64, n_out=128, rho=0.5,
+                        E=0, dtype="float32", quant=False, form="plain",
+                        block_in=128, block_out=128)
+
+
+def test_decide_rejects_illegal_entries():
+    bp = _pattern()
+    # pallas decision tuned on TPU must not dispatch on this CPU host
+    _put_junction_entry(bp, 16, {"backend": "pallas", "dataflow": "gather"})
+    assert tune.decide_junction(m=16, n_in=bp.n_in, n_out=bp.n_out,
+                                rho=bp.density) is None
+    # unknown backend
+    _put_junction_entry(bp, 16, {"backend": "bogus"})
+    assert tune.decide_junction(m=16, n_in=bp.n_in, n_out=bp.n_out,
+                                rho=bp.density) is None
+    # dense is illegal for the quant form
+    _put_junction_entry(bp, 16, {"backend": "dense"}, quant=True,
+                        form="quant")
+    assert tune.decide_junction(m=16, n_in=bp.n_in, n_out=bp.n_out,
+                                rho=bp.density, quant=True,
+                                form="quant") is None
+
+
+def test_disable_env_kills_lookups(monkeypatch):
+    bp = _pattern()
+    _put_junction_entry(bp, 16, {"backend": "dense"})
+    assert tune.decide_junction(m=16, n_in=bp.n_in, n_out=bp.n_out,
+                                rho=bp.density) is not None
+    monkeypatch.setenv(tcache.ENV_DISABLE, "1")
+    assert tune.decide_junction(m=16, n_in=bp.n_in, n_out=bp.n_out,
+                                rho=bp.density) is None
+    assert not tune.pending()       # disabled lookups don't queue work
+
+
+# ---------------------------------------------------------------------------
+# numerical parity: tuning changes performance only
+# ---------------------------------------------------------------------------
+
+
+def _operands(bp, m=16, E=0, seed=0):
+    lead = (E,) if E else ()
+    x = jax.random.normal(jax.random.key(seed), lead + (m, bp.n_in))
+    w = jax.random.normal(
+        jax.random.key(seed + 1),
+        lead + (bp.n_rb, bp.d_in_b, bp.block_in, bp.block_out)) * 0.05
+    return x, w
+
+
+@pytest.mark.parametrize("entry,explicit", [
+    ({"backend": "xla", "dataflow": "gather"},
+     dict(backend="xla", dataflow="gather")),
+    ({"backend": "xla", "dataflow": "scatter"},
+     dict(backend="xla", dataflow="scatter")),
+    ({"backend": "dense"}, dict(backend="dense")),
+])
+def test_auto_bit_identical_to_forced_backend(entry, explicit):
+    """A cache hit dispatches the winner's exact executable: auto output
+    == explicit-backend output, bitwise."""
+    bp = _pattern()
+    x, w = _operands(bp, m=16)
+    _put_junction_entry(bp, 16, entry)
+    y_auto = jax.jit(lambda x, w: ops.csd_matmul(
+        x, w, bp, backend="auto"))(x, w)
+    y_exp = jax.jit(lambda x, w: ops.csd_matmul(
+        x, w, bp, **explicit))(x, w)
+    assert np.array_equal(np.asarray(y_auto), np.asarray(y_exp))
+
+
+def test_disable_restores_heuristic_bitwise(monkeypatch):
+    """With a dense winner cached, REPRO_TUNE_DISABLE=1 must reproduce the
+    static heuristic's output exactly (xla/gather on CPU)."""
+    bp = _pattern()
+    x, w = _operands(bp, m=16)
+    _put_junction_entry(bp, 16, {"backend": "dense"})
+    monkeypatch.setenv(tcache.ENV_DISABLE, "1")
+    y_auto = jax.jit(lambda x, w: ops.csd_matmul(
+        x, w, bp, backend="auto"))(x, w)
+    y_xla = jax.jit(lambda x, w: ops.csd_matmul(
+        x, w, bp, backend="xla"))(x, w)
+    assert np.array_equal(np.asarray(y_auto), np.asarray(y_xla))
+
+
+@pytest.mark.parametrize("E", [0, 3])
+@pytest.mark.parametrize("activation", [None, "relu"])
+def test_dense_backend_matches_xla(E, activation):
+    """The dense-ref escape hatch is the same junction: forward within
+    f32 reassociation tolerance, grads at pattern blocks near-exact."""
+    bp = _pattern(n_in=96, n_out=160, rho=0.5, block=32)
+    x, w = _operands(bp, m=24, E=E)
+    bshape = ((E,) if E else ()) + (bp.n_out,)
+    b = jax.random.normal(jax.random.key(9), bshape) * 0.1
+    kw = dict(bias=b, activation=activation)
+    y_d = ops.csd_matmul(x, w, bp, backend="dense", **kw)
+    y_x = ops.csd_matmul(x, w, bp, backend="xla", **kw)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_x),
+                               atol=1e-5, rtol=1e-5)
+
+    def loss(be):
+        def f(x, w, b):
+            return jnp.mean(ops.csd_matmul(x, w, bp, bias=b,
+                                           activation=activation,
+                                           backend=be) ** 2)
+        return jax.grad(f, argnums=(0, 1, 2))
+
+    for gd, gx in zip(loss("dense")(x, w, b), loss("xla")(x, w, b)):
+        np.testing.assert_allclose(np.asarray(gd), np.asarray(gx),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_dense_backend_rejected_for_quant_and_sharded():
+    bp = _pattern()
+    x, w = _operands(bp, m=8)
+    from repro.core.quant import quantize_slab
+    q, s = quantize_slab(w)
+    with pytest.raises(ValueError, match="dense"):
+        ops.csd_matmul(x, q, bp, backend="dense", w_scale=s)
+
+
+# ---------------------------------------------------------------------------
+# tuner: measurement + certification gate
+# ---------------------------------------------------------------------------
+
+
+def test_bench_junction_tiny_picks_and_caches_winner():
+    spec = dict(m=8, n_in=64, n_out=64, rho=0.5, E=0, dtype="float32",
+                quant=False, form="plain", block_in=32, block_out=32)
+    c = tune.get_cache()
+    ent = tuner.bench_junction(spec, cache=c, iters=1, repeats=1)
+    assert ent["backend"] in ("xla", "dense")
+    assert ent["score_by"] == "fwd"                  # skinny M
+    assert ent["block_in"] == 32 and ent["block_out"] == 32
+    scores = [i["score_us"] for i in ent["candidates"].values()
+              if "score_us" in i]
+    assert ent["score_us"] == min(scores)
+    # persisted and consulted: the recorded decision round-trips disk
+    tune.reset_cache()
+    key = tune.junction_key(m=8, n_in=64, n_out=64, rho=0.5, E=0,
+                            dtype="float32", quant=False, form="plain")
+    assert tune.get_cache().get(key)["backend"] == ent["backend"]
+
+
+def test_bench_junction_quant_excludes_dense():
+    spec = dict(m=4, n_in=64, n_out=64, rho=0.5, E=0, dtype="float32",
+                quant=True, form="quant", block_in=32, block_out=32)
+    ent = tuner.bench_junction(spec, cache=None)
+    assert "dense" not in ent["candidates"]
+    assert ent["backend"] == "xla"
+
+
+def test_certify_injected_is_rejected():
+    """The has-teeth proof: sparselint's race-broken kernel, presented as
+    a tuned Pallas candidate, must fail SL101-SL105 certification."""
+    ok, findings = certify.certify_injected()
+    assert not ok
+    assert "SL101" in {f.code for f in findings}
+
+
+def test_certify_accepts_shipped_kernel():
+    bp = _pattern(n_in=256, n_out=256, rho=0.5, block=128)
+    ok, findings = certify.certify_junction(bp, m=128, block_m=128)
+    assert ok, [f"{f.code}: {f.message}" for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# analysis: the sparselint tune pass audits persisted caches
+# ---------------------------------------------------------------------------
+
+
+def test_tune_pass_flags_illegal_and_unreadable(tmp_path):
+    from repro.analysis import tune_pass
+    legal_key = tune.junction_key(m=8, n_in=64, n_out=64, rho=0.5)
+    quant_key = tune.junction_key(m=8, n_in=64, n_out=64, rho=0.5,
+                                  quant=True, form="quant")
+    p = tmp_path / "audit.json"
+    p.write_text(json.dumps({
+        "schema": tcache.SCHEMA_VERSION,
+        "entries": {
+            legal_key: {"backend": "dense"},
+            quant_key: {"backend": "dense"},      # illegal: quant regime
+            "not|a|key": {"backend": "xla"},
+        }}))
+    findings, covered = tune_pass.run(str(p))
+    assert sorted(f.code for f in findings) == ["SL401", "SL402"]
+    assert legal_key in covered
+
+    bad = tmp_path / "corrupt.json"
+    bad.write_text("{")
+    findings, _ = tune_pass.run(str(bad))
+    assert [f.code for f in findings] == ["SL402"]
+
+
+# ---------------------------------------------------------------------------
+# engine: tuned decode-kernel selection is performance-only
+# ---------------------------------------------------------------------------
+
+
+def test_engine_decode_tuned_token_parity():
+    """An engine running backend="auto" over a tuned cache entry emits the
+    same tokens as one forced to that entry's backend, and records the
+    decision on its obs registry."""
+    from repro.nn import ModelConfig, SparsityConfig, build_model
+    from repro.serving import EngineConfig, ServingEngine
+
+    sp = SparsityConfig(enabled=True, rho_ffn=(0.5, 1.0),
+                        block_in=16, block_out=16)
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab_size=256, attn_chunk=16,
+                      loss_chunk=16, dtype="float32", remat=False,
+                      sparsity=sp)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    ec = dict(max_slots=4, page_size=4, total_pages=24,
+              max_pages_per_seq=6, token_budget=16, prefill_chunk=8)
+    key = tune.decode_key(b=4, h_kv=2, groups=2, head_dim=cfg.head_dim,
+                          page_size=4, n_pages=6, pool=24, quant=False,
+                          dtype="float32")
+    c = tcache.TuneCache(tcache.default_path())
+    c.put(key, {"backend": "xla", "score_us": 1.0})
+    tune.reset_cache()
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 9, 6, 12)]
+    eng_auto = ServingEngine(model, params,
+                             EngineConfig(backend="auto", **ec))
+    eng_xla = ServingEngine(model, params,
+                            EngineConfig(backend="xla", **ec))
+    out_a = eng_auto.run(prompts, 6)
+    out_x = eng_xla.run(prompts, 6)
+    assert [list(map(int, o)) for o in out_a] == \
+        [list(map(int, o)) for o in out_x]
+    n_tuned = eng_auto.obs.counter("repro_tune_engine_decode_total").value(
+        backend="xla", tuned="true")
+    assert n_tuned == 1
+
+
+# ---------------------------------------------------------------------------
+# benchmarks plumbing: structured rows + the tuned-row gate
+# ---------------------------------------------------------------------------
+
+
+def test_emit_structured_rows():
+    from benchmarks import common
+    saved = list(common.ROWS)
+    common.ROWS.clear()
+    try:
+        common.emit("t/a", 12.345, {"speedup": 1.5})
+        common.emit("t/b", 1.0, 0.25)          # scalar -> {"value": ...}
+        common.emit("t/c", 0.0, "")            # empty -> {}
+        assert common.ROWS == [
+            {"name": "t/a", "us_per_call": 12.35,
+             "derived": {"speedup": 1.5}},
+            {"name": "t/b", "us_per_call": 1.0,
+             "derived": {"value": 0.25}},
+            {"name": "t/c", "us_per_call": 0.0, "derived": {}},
+        ]
+        assert all(isinstance(r["us_per_call"], float)
+                   for r in common.ROWS)
+    finally:
+        common.ROWS[:] = saved
+
+
+def test_check_tuned_gate():
+    from benchmarks.check_tuned import check
+    rows = [{"name": "kernel/csd_spmm_rho0.5_tuned", "us_per_call": 9.0,
+             "derived": {"tuned_speedup": 1.4, "speedup_vs_dense": 0.95}},
+            {"name": "kernel/csd_decode_m2_rho0.25_tuned",
+             "us_per_call": 8.0,
+             "derived": {"tuned_speedup": 7.0, "speedup_vs_dense": 1.2}},
+            {"name": "kernel/other", "us_per_call": 1.0,
+             "derived": {"speedup_vs_dense": 0.1}}]    # untuned: ignored
+    assert check(rows) == []
+    rows[0]["derived"]["tuned_speedup"] = 0.9          # lost to heuristic
+    assert len(check(rows)) == 1
+    assert check([]) != []                             # no rows = failure
+
+
+def test_timed_call_repeats_best_of_medians():
+    from repro.obs.trace import timed_call
+    us = timed_call(lambda x: x + 1, jnp.ones((4,)), iters=2, warmup=1,
+                    repeats=3, name="t")
+    assert 0 < us < 1e6
